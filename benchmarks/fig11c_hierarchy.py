@@ -1,0 +1,37 @@
+"""Paper Figure 11c: hierarchical decision level vs speedup (LavaMD).
+
+Thread-level (ELEMENT) decisions on a vector machine save NOTHING (masked
+lanes still execute -- the TPU-hardened version of warp divergence); group
+decisions (BLOCK, driving lax.cond / @pl.when) skip whole invocations. We
+compare ELEMENT vs BLOCK at equal thresholds: wall-time speedup appears
+only at BLOCK level; the paper's warp-level result (up to 2.27x median
+speedup) is the GPU shadow of the same effect.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "examples")
+
+from apps import lavamd
+from repro.core import ApproxSpec, Level, TAFParams, Technique
+from repro.core.harness import mape
+
+
+def main(report):
+    app = lavamd.make_app(nx=4, seed=2)
+    exact = app.exact()
+    for t in (0.3, 1.0, 3.0):
+        row = {}
+        for level in (Level.ELEMENT, Level.BLOCK):
+            spec = ApproxSpec(Technique.TAF, level,
+                              taf=TAFParams(3, 16, t))
+            r = app.run(spec)
+            err = mape(exact.qoi, r.qoi)
+            row[level] = (exact.wall_time_s / max(r.wall_time_s, 1e-9),
+                          r.approx_fraction, err)
+        e_sp, e_frac, e_err = row[Level.ELEMENT]
+        b_sp, b_frac, b_err = row[Level.BLOCK]
+        report("fig11c_hierarchy", f"T={t}",
+               f"element:wall={e_sp:.2f}x(frac={e_frac:.2f},err={e_err:.2%});"
+               f"block:wall={b_sp:.2f}x(frac={b_frac:.2f},err={b_err:.2%})")

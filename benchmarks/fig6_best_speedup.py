@@ -1,0 +1,49 @@
+"""Paper Figure 6: best speedup with error < 10%, per app x technique.
+
+Sweeps a reduced Table-2-style grid per technique over each benchmark app
+and reports the fastest configuration under the 10% error bound, in both
+measured wall time (this CPU container) and modeled speedup
+(1 / executed-fraction: the roofline-bound speedup on a machine where
+skipped work is genuinely free, i.e. TPU block-level).
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "examples")
+
+from apps import binomial_options, blackscholes, kmeans, lavamd
+from repro.core import Level
+from repro.core.harness import (best_speedup_under_error, iact_grid, sweep,
+                                taf_grid)
+
+APPS = {
+    "blackscholes": (blackscholes.make_app, dict(n_elements=512, steps=48)),
+    "binomial": (binomial_options.make_app,
+                 dict(n_elements=48, steps=16, tree_steps=96)),
+    "kmeans": (kmeans.make_app, dict(n=1024, d=6, k=8)),
+    "lavamd": (lavamd.make_app, dict(nx=4)),
+}
+
+TAF_GRID = taf_grid(h_sizes=(2, 3), p_sizes=(8, 64),
+                    thresholds=(0.1, 0.5, 1.5),
+                    levels=(Level.ELEMENT, Level.BLOCK))
+IACT_GRID = iact_grid(t_sizes=(2, 4), thresholds=(0.3, 0.9),
+                      tables_per_block=(0, 8),
+                      levels=(Level.ELEMENT, Level.BLOCK))
+
+
+def main(report):
+    for name, (make, kw) in APPS.items():
+        app = make(**kw)
+        for tech, grid in (("taf", TAF_GRID), ("iact", IACT_GRID)):
+            recs = sweep(app, grid, repeats=2)
+            best = best_speedup_under_error(recs, 0.10, use_modeled=True)
+            if best is None:
+                report("fig6_best_speedup", f"{name}/{tech}",
+                       "no config under 10% error")
+                continue
+            report("fig6_best_speedup", f"{name}/{tech}",
+                   f"modeled={best.modeled_speedup:.2f}x,"
+                   f"wall={best.speedup:.2f}x,err={best.error:.3%},"
+                   f"level={best.spec['level']}")

@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: per-kernel interpret-mode validation timing and
+the block-skip savings profile (structural FLOP reduction per config).
+
+Wall times here are interpret-mode (Python) -- meaningful only relatively;
+the structural numbers (executed grid fraction, FLOPs) are machine-true.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PerforationKind, PerforationParams
+from repro.core.perforation import drop_fraction
+from repro.kernels import ops, ref
+
+
+def _time(f, *args):
+    out = f(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def main(report):
+    rng = np.random.RandomState(0)
+    m = k = n = 256
+    x = jnp.asarray(np.tile(rng.randn(1, k), (m, 1)).astype(np.float32))
+    w = jnp.asarray(rng.randn(k, n).astype(np.float32))
+
+    us = _time(lambda a, b: ops.taf_matmul(a, b, block_m=64, block_n=64)[0],
+               x, w)
+    y, mask = ops.taf_matmul(x, w, block_m=64, block_n=64)
+    yr, mr = ref.taf_matmul_ref(x, w, block_m=64, block_n=64, history_size=3,
+                                prediction_size=8, rsd_threshold=0.5)
+    ok = np.allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+    report("kernel_taf_matmul", f"{us:.0f}",
+           f"oracle_match={ok},blocks_skipped={np.asarray(mask).mean():.0%}")
+
+    # 4 distinct row-values, each spanning 2 consecutive 32-row blocks:
+    # the second block of each pair hits the table written by the first
+    x2 = jnp.asarray(np.repeat(rng.randn(4, 64), 64, 0).astype(np.float32))
+    w1 = jnp.asarray(rng.randn(64, 128).astype(np.float32) * 0.1)
+    w2 = jnp.asarray(rng.randn(128, 32).astype(np.float32) * 0.1)
+    us = _time(lambda a: ops.iact_rowfn(a, w1, w2, block_rows=32)[0], x2)
+    y2, m2 = ops.iact_rowfn(x2, w1, w2, block_rows=32)
+    y2r, m2r = ref.iact_rowfn_ref(x2, w1, w2, block_rows=32, table_size=4,
+                                  threshold=0.5)
+    ok = np.allclose(np.asarray(y2), np.asarray(y2r), atol=1e-3)
+    report("kernel_iact_rowfn", f"{us:.0f}",
+           f"oracle_match={ok},blocks_hit={np.asarray(m2).mean():.0%}")
+
+    for skip in (2, 4, 8):
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=skip)
+        us = _time(lambda a, b: ops.perforated_matmul(
+            a, b, block_m=64, block_n=64, block_k=64, perfo=p), x, w)
+        saved = drop_fraction(k // 64, p)
+        report("kernel_perforated_matmul", f"{us:.0f}",
+               f"skip={skip},flops_saved={saved:.0%}")
+
+    q = jnp.asarray(rng.randn(1, 4, 128, 64).astype(np.float32))
+    kk = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+    v = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+    for fr in (0.0, 0.5):
+        p = (None if fr == 0.0 else
+             PerforationParams(kind=PerforationKind.INI, fraction=fr))
+        us = _time(lambda a, b, c: ops.perforated_attention(
+            a, b, c, block_q=64, block_kv=64, perfo=p), q, kk, v)
+        report("kernel_perforated_attention", f"{us:.0f}",
+               f"ini_drop={fr:.0%}")

@@ -1,0 +1,37 @@
+"""Roofline/dry-run table: summarize results/dryrun/*.json +
+results/roofline/*.json (produced by launch.dryrun / launch.roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def main(report):
+    dr = sorted(glob.glob(os.path.join(RESULTS, "dryrun", "*.json")))
+    ok = skipped = failed = 0
+    for path in dr:
+        with open(path) as f:
+            rec = json.load(f)
+        s = rec.get("status")
+        ok += s == "ok"
+        skipped += s == "skipped"
+        failed += s == "FAILED"
+    report("dryrun_matrix", f"{len(dr)}",
+           f"ok={ok},skipped={skipped},failed={failed}")
+
+    rf = sorted(glob.glob(os.path.join(RESULTS, "roofline", "*.json")))
+    for path in rf:
+        with open(path) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        report("roofline",
+               f"{rec['arch']}/{rec['shape']}/{rec.get('tag', 'baseline')}",
+               f"dominant={rec['dominant']},"
+               f"compute={rec['compute_s']:.3g}s,"
+               f"memory={rec['memory_s']:.3g}s,"
+               f"coll={rec['collective_s']:.3g}s,"
+               f"frac={rec['roofline_fraction']:.3f}")

@@ -1,0 +1,56 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines. Usage:
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,kernel]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, "examples")
+
+from . import (fig3_table_memory, fig6_best_speedup, fig7_cg_sweep,
+               fig8c_items_per_thread, fig10c_rsd_behavior, fig11c_hierarchy,
+               fig12c_kmeans_convergence, kernel_micro, roofline_table)
+
+MODULES = {
+    "fig3": fig3_table_memory,
+    "fig6": fig6_best_speedup,
+    "fig7": fig7_cg_sweep,
+    "fig8c": fig8c_items_per_thread,
+    "fig10c": fig10c_rsd_behavior,
+    "fig11c": fig11c_hierarchy,
+    "fig12c": fig12c_kmeans_convergence,
+    "kernel": kernel_micro,
+    "roofline": roofline_table,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module keys "
+                    f"(default all: {','.join(MODULES)})")
+    args = ap.parse_args()
+    keys = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+
+    def report(name: str, us, derived: str = ""):
+        print(f"{name},{us},{derived}", flush=True)
+
+    for key in keys:
+        mod = MODULES[key.strip()]
+        t0 = time.time()
+        try:
+            mod.main(report)
+        except Exception as e:  # keep the harness running
+            report(key, "ERROR", str(e)[:200])
+        report(f"_{key}_total_s", f"{time.time() - t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""JAX analogues of the HPAC-Offload benchmark suite (paper Table 1).
+
+Each app follows the harness `ApproxApp` protocol: run(spec) executes the
+app with a given approximation spec and returns its QoI + timing + approx
+statistics. The apps are sized to run single configs in O(seconds) on this
+CPU container; the DSE harness sweeps paper-Table-2-style grids over them.
+
+  blackscholes     -- PARSEC Blackscholes (analytic European options)
+  binomial_options -- CUDA SDK binomial American options (tree scan)
+  kmeans           -- Rodinia K-Means (MCR metric, convergence speedup)
+  lavamd           -- Rodinia LavaMD-like particle forces in boxes
+  minife_cg        -- MiniFE-like CG solver on a Poisson stencil
+"""
+from . import binomial_options, blackscholes, kmeans, lavamd, minife_cg
+
+__all__ = ["binomial_options", "blackscholes", "kmeans", "lavamd",
+           "minife_cg"]

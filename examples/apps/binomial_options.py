@@ -1,0 +1,107 @@
+"""Binomial American option pricing (paper: CUDA SDK BinomialOptions).
+
+Each option price is an O(tree_steps^2) backward induction -- the paper's
+"entire block collaboratively computes the price of a single option", hence
+block-level decision-making only. The expensive region is the whole tree;
+TAF/iACT memoize across an element's successive options.
+
+This app also powers the Figure-8c experiment: with a fixed workload of
+n_total options, `items_per_thread` trades element parallelism against
+per-element approximation potential.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ApproxSpec, Technique
+from repro.core.harness import AppResult, ApproxApp
+from repro.core import iact as iact_mod
+from repro.core import taf as taf_mod
+
+
+def binomial_price(inputs: jnp.ndarray, tree_steps: int = 128) -> jnp.ndarray:
+    """inputs: (N, 5) = [S, K, T, r, sigma] -> American put prices (N,)."""
+    s, k, t, r, sig = [inputs[:, i] for i in range(5)]
+    dt = t / tree_steps
+    u = jnp.exp(sig * jnp.sqrt(dt))
+    d = 1.0 / u
+    disc = jnp.exp(-r * dt)
+    p = (jnp.exp(r * dt) - d) / (u - d)
+    j = jnp.arange(tree_steps + 1, dtype=jnp.float32)
+    # terminal prices: (N, steps+1)
+    st = s[:, None] * u[:, None] ** (2.0 * j[None, :] - tree_steps)
+    vals = jnp.maximum(k[:, None] - st, 0.0)
+
+    def backstep(i, vals):
+        cont = disc[:, None] * (p[:, None] * vals[:, 1:] +
+                                (1 - p[:, None]) * vals[:, :-1])
+        level = tree_steps - i - 1
+        stl = s[:, None] * u[:, None] ** (
+            2.0 * j[None, :-1] - level)
+        ex = jnp.maximum(k[:, None] - stl, 0.0)
+        new = jnp.maximum(cont, ex)
+        return jnp.pad(new, ((0, 0), (0, 1)))
+
+    vals = jax.lax.fori_loop(0, tree_steps, backstep, vals)
+    return vals[:, 0]
+
+
+def gen_inputs(n_elements: int, steps: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    s0 = rng.uniform(20, 120, (n_elements,))
+    base = np.stack([
+        s0, s0 * rng.uniform(0.9, 1.1, (n_elements,)),
+        rng.uniform(0.2, 2.0, (n_elements,)),
+        np.full((n_elements,), 0.05),
+        rng.uniform(0.1, 0.6, (n_elements,)),
+    ], axis=1)
+    drift = rng.standard_normal((steps, n_elements, 5)) * \
+        np.array([0.03, 0.0, 0.0, 0.0, 0.0003])
+    walk = base[None] * (1.0 + np.cumsum(drift, axis=0) * 0.01)
+    return np.maximum(walk, 1e-3).astype(np.float32)
+
+
+_SPECS = {}
+
+
+@lru_cache(maxsize=64)
+def _jitted_runner(spec_key, n_elements, steps, tree_steps, seed):
+    xs = jnp.asarray(gen_inputs(n_elements, steps, seed))
+    spec = _SPECS[spec_key]
+    fn_price = lambda x: binomial_price(x, tree_steps)
+
+    if spec.technique == Technique.TAF:
+        fn = jax.jit(lambda xs: taf_mod.run_sequence(
+            spec.taf, xs, fn_price, spec.level))
+    elif spec.technique == Technique.IACT:
+        fn = jax.jit(lambda xs: iact_mod.run_sequence(
+            spec.iact, xs, fn_price, spec.level))
+    else:
+        fn = jax.jit(lambda xs: (jax.lax.map(fn_price, xs), None,
+                                 jnp.float32(0)))
+    return fn, xs
+
+
+def make_app(n_elements: int = 64, steps: int = 32, tree_steps: int = 128,
+             seed: int = 0) -> ApproxApp:
+    def run(spec: ApproxSpec) -> AppResult:
+        key = repr(spec)
+        _SPECS[key] = spec
+        fn, xs = _jitted_runner(key, n_elements, steps, tree_steps, seed)
+        out = fn(xs)
+        jax.block_until_ready(out[0])
+        t0 = time.perf_counter()
+        ys, _, frac = fn(xs)
+        jax.block_until_ready(ys)
+        wall = time.perf_counter() - t0
+        frac = float(frac) if frac is not None else 0.0
+        return AppResult(qoi=np.asarray(ys), wall_time_s=wall,
+                         approx_fraction=frac,
+                         flop_fraction=max(1.0 - frac, 1e-3))
+
+    return ApproxApp(name="binomial_options", run=run, error_metric="mape")

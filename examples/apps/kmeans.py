@@ -1,0 +1,102 @@
+"""K-Means (Rodinia) under approximation.
+
+The approximated region is the per-iteration distance/assignment kernel.
+QoI: final cluster id per observation; error metric: MCR (paper Eq. 2).
+The paper's key finding (Figure 12c): approximation herds observations into
+stable clusters => EARLY CONVERGENCE; speedup correlates with convergence
+speedup (R^2 = 0.95). This app therefore reports iterations-to-converge for
+the exact and approximate runs in `extra`.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import ApproxSpec, Technique
+from repro.core.harness import AppResult, ApproxApp
+from repro.core import iact as iact_mod
+from repro.core import taf as taf_mod
+
+
+def gen_data(n: int = 2048, d: int = 8, k: int = 12, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    centers = rng.standard_normal((k, d)) * 4.0
+    assign = rng.randint(0, k, n)
+    pts = centers[assign] + rng.standard_normal((n, d))
+    return pts.astype(np.float32), k
+
+
+def _assign_exact(pts, centers):
+    d2 = jnp.sum((pts[:, None, :] - centers[None]) ** 2, axis=-1)
+    return jnp.argmin(d2, axis=1)
+
+
+def run_kmeans(pts: np.ndarray, k: int, spec: ApproxSpec,
+               max_iters: int = 40):
+    """Lloyd's algorithm; the distance kernel output (min-distance centroid
+    index summary) is the approximated region, per element (observation)."""
+    n, dim = pts.shape
+    pts_j = jnp.asarray(pts)
+
+    state = None
+    if spec.technique == Technique.TAF:
+        state = taf_mod.init(spec.taf, n, (), jnp.float32)
+    elif spec.technique == Technique.IACT:
+        n_tab = iact_mod.n_tables_for(spec.iact, n)
+        state = iact_mod.init(spec.iact, n_tab, dim, (), jnp.float32)
+
+    @jax.jit
+    def step(centers, state):
+        if spec.technique == Technique.TAF:
+            out, new_state, mask = taf_mod.step(
+                state, lambda: _assign_exact(pts_j, centers).astype(
+                    jnp.float32), spec.taf, spec.level)
+            assign = out.astype(jnp.int32)
+        elif spec.technique == Technique.IACT:
+            out, new_state, mask = iact_mod.step(
+                state, pts_j,
+                lambda x: _assign_exact(x, centers).astype(jnp.float32),
+                spec.iact, spec.level)
+            assign = out.astype(jnp.int32)
+        else:
+            assign = _assign_exact(pts_j, centers)
+            new_state, mask = state, jnp.zeros((n,), bool)
+        onehot = jax.nn.one_hot(assign, k, dtype=jnp.float32)
+        counts = jnp.maximum(onehot.sum(0), 1.0)
+        new_centers = (onehot.T @ pts_j) / counts[:, None]
+        return new_centers, assign, new_state, jnp.mean(
+            mask.astype(jnp.float32))
+
+    rng = np.random.RandomState(1)
+    centers = jnp.asarray(pts[rng.choice(n, k, replace=False)])
+    prev = None
+    fracs = []
+    iters = max_iters
+    for it in range(max_iters):
+        centers, assign, state, frac = step(centers, state)
+        fracs.append(float(frac))
+        a = np.asarray(assign)
+        if prev is not None and np.array_equal(a, prev):
+            iters = it + 1
+            break
+        prev = a
+    return prev if prev is not None else np.asarray(assign), iters, \
+        float(np.mean(fracs))
+
+
+def make_app(n: int = 2048, d: int = 8, k: int = 12,
+             seed: int = 0) -> ApproxApp:
+    pts, k = gen_data(n, d, k, seed)
+
+    def run(spec: ApproxSpec) -> AppResult:
+        t0 = time.perf_counter()
+        assign, iters, frac = run_kmeans(pts, k, spec)
+        wall = time.perf_counter() - t0
+        return AppResult(qoi=assign, wall_time_s=wall, approx_fraction=frac,
+                         flop_fraction=max(iters / 40 * (1 - frac), 1e-3),
+                         extra={"iters": iters})
+
+    return ApproxApp(name="kmeans", run=run, error_metric="mcr")

@@ -1,0 +1,5 @@
+from .base import SHAPES, ModelConfig, ShapeConfig, shape_applicable
+from .registry import get_config, get_smoke_config, list_archs
+
+__all__ = ["SHAPES", "ModelConfig", "ShapeConfig", "shape_applicable",
+           "get_config", "get_smoke_config", "list_archs"]

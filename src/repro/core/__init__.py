@@ -1,0 +1,25 @@
+"""repro.core -- the paper's primary contribution in JAX.
+
+HPAC-Offload (Fink et al., 2023): pragma-based approximate computing for
+GPU-offloaded regions, re-derived for TPU execution (see DESIGN.md section 2).
+
+Public surface:
+  types        -- ApproxSpec / TAFParams / IACTParams / PerforationParams / Level
+  approx       -- ApproxRegion (the "pragma"), parse_pragma, perforated_loop
+  taf / iact   -- technique state machines (functional, scan- and Pallas-safe)
+  perforation  -- skip-pattern generation (small/large/ini/fini, herded)
+  hierarchy    -- element/tile/block majority-rules voting
+  harness      -- the DSE execution harness + error metrics (MAPE, MCR)
+"""
+from . import (approx, autotune, harness, hierarchy, iact, perforation,
+               rsd, taf, types)
+from .approx import ApproxRegion, perforated_loop
+from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
+                    PerforationParams, TAFParams, Technique, parse_pragma)
+
+__all__ = [
+    "approx", "autotune", "harness", "hierarchy", "iact", "perforation", "rsd", "taf",
+    "types", "ApproxRegion", "perforated_loop", "ApproxSpec", "IACTParams",
+    "Level", "PerforationKind", "PerforationParams", "TAFParams", "Technique",
+    "parse_pragma",
+]

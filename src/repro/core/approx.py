@@ -1,0 +1,138 @@
+"""The HPAC-Offload "pragma" as a JAX region API.
+
+A C++ HPAC-Offload region:
+
+    #pragma approx memo(in:2:0.5f:4) level(warp) in(...) out(...)
+    output[i] = foo(&input[5*i], 5, N);
+
+becomes:
+
+    spec = parse_pragma("memo(in:2:0.5:4) level(warp)")     # or ApproxSpec(...)
+    region = ApproxRegion(spec, foo_batched, n_elements=N, in_dim=5)
+    out, _ = region(x)                 # stateful object API, or
+    out, st, mask = region.step(st, x) # functional API for scan/jit
+
+`ApproxRegion` owns the technique state (TAF window / iACT tables) exactly the
+way the HPAC runtime owns the per-thread AC state, but as an explicit pytree.
+Perforation is loop-shaped rather than region-shaped; `perforated_loop` and
+`perforation.kept_indices` cover it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import iact as iact_mod
+from . import perforation as perfo_mod
+from . import taf as taf_mod
+from .types import ApproxSpec, Level, Technique, parse_pragma  # re-export
+
+__all__ = [
+    "ApproxSpec", "ApproxRegion", "parse_pragma", "perforated_loop",
+]
+
+
+@dataclasses.dataclass
+class ApproxRegion:
+    """An approximated code region (the dynamic extent of one pragma).
+
+    fn: the accurate path, batched over elements: (N, in_dim)->(N, *out) for
+    IACT, or ()->(N, *out) thunk inputs for TAF (TAF ignores inputs by
+    definition -- it memoizes on *outputs*).
+    """
+
+    spec: ApproxSpec
+    fn: Callable
+    n_elements: int
+    in_dim: int = 1
+    out_shape: Tuple[int, ...] = ()
+    out_dtype: object = jnp.float32
+    tile_size: Optional[int] = None
+
+    def init_state(self):
+        t = self.spec.technique
+        if t == Technique.TAF:
+            return taf_mod.init(self.spec.taf, self.n_elements, self.out_shape,
+                                self.out_dtype)
+        if t == Technique.IACT:
+            n_tab = iact_mod.n_tables_for(self.spec.iact, self.n_elements)
+            return iact_mod.init(self.spec.iact, n_tab, self.in_dim,
+                                 self.out_shape, self.out_dtype)
+        return ()
+
+    def step(self, state, x: Optional[jnp.ndarray] = None):
+        """Functional single-invocation step -> (out, new_state, approx_mask)."""
+        t = self.spec.technique
+        if t == Technique.TAF:
+            thunk = (lambda: self.fn(x)) if x is not None else self.fn
+            return taf_mod.step(state, thunk, self.spec.taf, self.spec.level,
+                                tile_size=self.tile_size)
+        if t == Technique.IACT:
+            return iact_mod.step(state, x, self.fn, self.spec.iact,
+                                 self.spec.level, tile_size=self.tile_size)
+        if t == Technique.NONE:
+            y = self.fn(x) if x is not None else self.fn()
+            return y, state, jnp.zeros((self.n_elements,), bool)
+        raise ValueError(f"ApproxRegion.step does not handle {t}; use "
+                         "perforated_loop for perforation")
+
+    def run(self, xs: jnp.ndarray):
+        """Run a whole invocation sequence (T, N, ...) under scan.
+
+        Returns (outputs, approx_fraction).
+        """
+        t = self.spec.technique
+        if t == Technique.TAF:
+            ys, _, frac = taf_mod.run_sequence(self.spec.taf, xs, self.fn,
+                                               self.spec.level,
+                                               tile_size=self.tile_size)
+            return ys, frac
+        if t == Technique.IACT:
+            ys, _, frac = iact_mod.run_sequence(self.spec.iact, xs, self.fn,
+                                                self.spec.level,
+                                                tile_size=self.tile_size)
+            return ys, frac
+        if t == Technique.NONE:
+            ys = jax.lax.map(self.fn, xs)
+            return ys, jnp.float32(0.0)
+        raise ValueError(f"ApproxRegion.run does not handle {t}")
+
+
+def perforated_loop(spec: ApproxSpec, n_iters: int,
+                    body: Callable[[int, object], object], carry,
+                    herded_structural: bool = True):
+    """`for i in range(n): carry = body(i, carry)` with loop perforation.
+
+    With herded perforation (spec.perforation.herded) the kept-iteration set
+    is static, so the loop is *structurally* shortened (fori over the kept
+    subset): iterations are genuinely not executed -- the paper's uniform
+    control flow payoff. Returns (carry, executed_fraction).
+    """
+    if spec.technique != Technique.PERFORATION:
+        for_all = jax.lax.fori_loop(
+            0, n_iters, lambda i, c: body(i, c), carry)
+        return for_all, 1.0
+    p = spec.perforation
+    keep = perfo_mod.kept_indices(n_iters, p)
+    if herded_structural and p.herded:
+        keep_arr = jnp.asarray(keep, jnp.int32)
+
+        def kept_body(j, c):
+            return body(keep_arr[j], c)
+
+        out = jax.lax.fori_loop(0, len(keep), kept_body, carry)
+        return out, len(keep) / max(n_iters, 1)
+    # Non-herded / masked fallback: every iteration runs; skipped ones are
+    # data-masked inside `body` by convention (body receives -1).
+    mask = perfo_mod.execute_mask(n_iters, p)
+    mask_arr = jnp.asarray(mask)
+
+    def masked_body(i, c):
+        return jax.lax.cond(mask_arr[i], lambda cc: body(i, cc),
+                            lambda cc: cc, c)
+
+    out = jax.lax.fori_loop(0, n_iters, masked_body, carry)
+    return out, float(mask.mean())

@@ -1,0 +1,86 @@
+"""Approximation autotuning -- the paper's stated future work (section 4.2):
+
+"there is considerable value in work that automates the end-to-end workflow
+ [...] smart search/optimization techniques (genetic algorithms, Bayesian
+ Optimization) to reduce parameter exploration costs."
+
+`successive_halving` replaces the exhaustive Cartesian sweep with a
+multi-fidelity race: all configs are evaluated on a cheap fidelity (few
+repeats / reduced workload), the best `1/eta` survive to the next rung at
+higher fidelity. `random_search` is the budget-capped baseline. Both emit
+the same Record stream as harness.sweep, so benchmarks and the results
+database are drop-in compatible.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Callable, List, Optional, Sequence
+
+from .harness import AppResult, ApproxApp, ERROR_METRICS, Record, spec_to_dict
+from .types import ApproxSpec
+
+
+def _evaluate(app: ApproxApp, spec: ApproxSpec, exact: AppResult,
+              repeats: int) -> Record:
+    metric = ERROR_METRICS[app.error_metric]
+    best: Optional[AppResult] = None
+    for _ in range(max(1, repeats)):
+        r = app.run(spec)
+        if best is None or r.wall_time_s < best.wall_time_s:
+            best = r
+    return Record(
+        app=app.name, spec=spec_to_dict(spec),
+        error=metric(exact.qoi, best.qoi),
+        speedup=exact.wall_time_s / max(best.wall_time_s, 1e-12),
+        modeled_speedup=1.0 / max(best.flop_fraction, 1e-12),
+        approx_fraction=float(best.approx_fraction),
+        wall_time_s=best.wall_time_s, exact_time_s=exact.wall_time_s,
+        extra=best.extra)
+
+
+def _score(rec: Record, max_error: float) -> float:
+    """Tuning objective: modeled speedup, zeroed when over the error bound
+    (the paper's 'best speedup with error < 10%' criterion)."""
+    if not (rec.error < max_error):
+        return 0.0
+    return rec.modeled_speedup
+
+
+def successive_halving(app: ApproxApp, specs: Sequence[ApproxSpec], *,
+                       max_error: float = 0.10, eta: int = 3,
+                       base_repeats: int = 1,
+                       seed: int = 0) -> List[Record]:
+    """Multi-fidelity race over `specs`: each rung costs ~n_base cheap
+    evaluations (the pool shrinks by eta while fidelity grows by eta), so
+    the total is ~n x n_rungs vs n x final_fidelity for an exhaustive sweep
+    at the final fidelity. Returns the FINAL rung's records, best first."""
+    rng = random.Random(seed)
+    exact = app.exact()
+    pool = list(specs)
+    rng.shuffle(pool)
+    repeats = base_repeats
+    rung_records: List[Record] = []
+    while pool:
+        rung_records = [_evaluate(app, s, exact, repeats) for s in pool]
+        ranked = sorted(zip(rung_records, pool),
+                        key=lambda rs: -_score(rs[0], max_error))
+        keep = max(1, len(pool) // eta)
+        if len(pool) == keep or keep == 1 and len(pool) <= eta:
+            rung_records = [r for r, _ in ranked[:keep]]
+            break
+        pool = [s for _, s in ranked[:keep]]
+        repeats *= eta
+    return sorted(rung_records, key=lambda r: -_score(r, max_error))
+
+
+def random_search(app: ApproxApp, sampler: Callable[[random.Random],
+                                                    ApproxSpec], *,
+                  budget: int = 20, max_error: float = 0.10,
+                  repeats: int = 1, seed: int = 0) -> List[Record]:
+    """Budget-capped random search with a spec sampler."""
+    rng = random.Random(seed)
+    exact = app.exact()
+    records = [_evaluate(app, sampler(rng), exact, repeats)
+               for _ in range(budget)]
+    return sorted(records, key=lambda r: -_score(r, max_error))

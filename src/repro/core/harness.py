@@ -1,0 +1,211 @@
+"""The HPAC execution harness (paper section 2.3 "Design of HPAC").
+
+"The HPAC execution harness exhaustively explores the space of user-provided
+approximation techniques and parameters. [...] After executing the
+approximated program, the harness calculates and saves runtime information
+and error to a database."
+
+`sweep` does exactly that over a grid of ApproxSpecs for an application that
+follows the `ApproxApp` protocol; results land in a JSON "database" consumed
+by benchmarks/ (one module per paper figure).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+import os
+import time
+from typing import Callable, Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
+                    PerforationParams, TAFParams, Technique)
+
+
+def mape(o_ac: np.ndarray, o_ap: np.ndarray, eps: float = 1e-30) -> float:
+    """Mean absolute percent error -- paper Eq. (1)."""
+    o_ac = np.asarray(o_ac, np.float64).ravel()
+    o_ap = np.asarray(o_ap, np.float64).ravel()
+    return float(np.mean(np.abs(o_ac - o_ap) /
+                         np.maximum(np.abs(o_ac), eps)))
+
+
+def mcr(o_ac: np.ndarray, o_ap: np.ndarray) -> float:
+    """Misclassification rate -- paper Eq. (2) (used for K-Means)."""
+    o_ac = np.asarray(o_ac).ravel()
+    o_ap = np.asarray(o_ap).ravel()
+    return float(np.mean(o_ac != o_ap))
+
+
+ERROR_METRICS = {"mape": mape, "mcr": mcr}
+
+
+@dataclasses.dataclass
+class AppResult:
+    """What one approximated execution returns to the harness."""
+
+    qoi: np.ndarray                   # quantity of interest (paper Table 1)
+    wall_time_s: float                # measured end-to-end (or kernel) time
+    approx_fraction: float = 0.0      # fraction of invocations approximated
+    flop_fraction: float = 1.0        # executed FLOPs / accurate FLOPs
+    extra: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class ApproxApp:
+    """An application under study (one row of paper Table 1)."""
+
+    name: str
+    run: Callable[[ApproxSpec], AppResult]   # execute with a given spec
+    error_metric: str = "mape"               # 'mape' or 'mcr'
+
+    def exact(self) -> AppResult:
+        return self.run(ApproxSpec())
+
+
+@dataclasses.dataclass
+class Record:
+    app: str
+    spec: Dict
+    error: float
+    speedup: float                 # measured wall-time speedup vs exact
+    modeled_speedup: float         # 1 / flop_fraction: the TPU-roofline bound
+    approx_fraction: float
+    wall_time_s: float
+    exact_time_s: float
+    extra: Dict
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+def spec_to_dict(spec: ApproxSpec) -> Dict:
+    d: Dict = {"technique": spec.technique.value, "level": spec.level.value}
+    if spec.taf:
+        d.update(hSize=spec.taf.history_size, pSize=spec.taf.prediction_size,
+                 thresh=spec.taf.rsd_threshold)
+    if spec.iact:
+        d.update(tSize=spec.iact.table_size, thresh=spec.iact.threshold,
+                 tPerBlock=spec.iact.tables_per_block)
+    if spec.perforation:
+        d.update(kind=spec.perforation.kind.value, skip=spec.perforation.skip,
+                 fraction=spec.perforation.fraction,
+                 herded=spec.perforation.herded)
+    return d
+
+
+def _timed(fn: Callable[[], AppResult], repeats: int) -> AppResult:
+    """Best-of-N timing: the paper runs 3 trials (8 for Blackscholes) and
+    reports means; on a shared CPU container min-of-N is the lower-noise
+    statistic, and the result payload is identical across repeats."""
+    best: Optional[AppResult] = None
+    for _ in range(max(1, repeats)):
+        r = fn()
+        if best is None or r.wall_time_s < best.wall_time_s:
+            best = r
+    return best
+
+
+def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
+          db_path: Optional[str] = None, verbose: bool = False) -> List[Record]:
+    """Run `app` exactly once per spec (plus the exact baseline), computing
+    error vs. the exact QoI and speedups; append to the JSON database."""
+    exact = _timed(lambda: app.exact(), repeats)
+    metric = ERROR_METRICS[app.error_metric]
+    records: List[Record] = []
+    for spec in specs:
+        res = _timed(lambda: app.run(spec), repeats)
+        err = metric(exact.qoi, res.qoi)
+        rec = Record(
+            app=app.name,
+            spec=spec_to_dict(spec),
+            error=err,
+            speedup=exact.wall_time_s / max(res.wall_time_s, 1e-12),
+            modeled_speedup=1.0 / max(res.flop_fraction, 1e-12),
+            approx_fraction=float(res.approx_fraction),
+            wall_time_s=res.wall_time_s,
+            exact_time_s=exact.wall_time_s,
+            extra=res.extra,
+        )
+        records.append(rec)
+        if verbose:
+            print(f"[{app.name}] {rec.spec} err={err:.4g} "
+                  f"speedup={rec.speedup:.2f}x modeled={rec.modeled_speedup:.2f}x")
+    if db_path:
+        save_db(records, db_path, append=True)
+    return records
+
+
+def save_db(records: Sequence[Record], path: str, append: bool = False) -> None:
+    rows = [r.to_json() for r in records]
+    if append and os.path.exists(path):
+        with open(path) as f:
+            rows = json.load(f) + rows
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(rows, f, indent=1)
+    os.replace(tmp, path)
+
+
+def load_db(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+# ----------------------------------------------------------------------------
+# Parameter grids (paper Table 2)
+# ----------------------------------------------------------------------------
+
+def taf_grid(h_sizes=(1, 2, 3, 4, 5), p_sizes=(2, 8, 32, 128, 512),
+             thresholds=(0.3, 0.6, 0.9, 1.2, 1.5, 3, 5, 20),
+             levels=(Level.ELEMENT, Level.TILE)) -> List[ApproxSpec]:
+    return [ApproxSpec(Technique.TAF, lv,
+                       taf=TAFParams(h, p, t))
+            for h, p, t, lv in itertools.product(h_sizes, p_sizes, thresholds,
+                                                 levels)]
+
+
+def iact_grid(t_sizes=(1, 2, 4, 8),
+              thresholds=(0.1, 0.3, 0.5, 0.7, 0.9, 3, 5, 20),
+              tables_per_block=(1, 2, 16, 32),
+              levels=(Level.ELEMENT, Level.TILE)) -> List[ApproxSpec]:
+    return [ApproxSpec(Technique.IACT, lv,
+                       iact=IACTParams(s, t, w))
+            for s, t, w, lv in itertools.product(t_sizes, thresholds,
+                                                 tables_per_block, levels)]
+
+
+def perfo_grid(skips=(2, 4, 8, 16, 32, 64),
+               fractions=(0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9),
+               kinds=(PerforationKind.SMALL, PerforationKind.LARGE,
+                      PerforationKind.INI, PerforationKind.FINI),
+               herded=(True,)) -> List[ApproxSpec]:
+    out = []
+    for k in kinds:
+        if k in (PerforationKind.SMALL, PerforationKind.LARGE):
+            for m in skips:
+                for h in herded:
+                    out.append(ApproxSpec(
+                        Technique.PERFORATION,
+                        perforation=PerforationParams(kind=k, skip=m, herded=h)))
+        else:
+            for fr in fractions:
+                for h in herded:
+                    out.append(ApproxSpec(
+                        Technique.PERFORATION,
+                        perforation=PerforationParams(kind=k, fraction=fr,
+                                                      herded=h)))
+    return out
+
+
+def best_speedup_under_error(records: Sequence[Record], max_error: float = 0.10,
+                             use_modeled: bool = False) -> Optional[Record]:
+    """Paper Figure 6 statistic: fastest configuration whose error < bound."""
+    ok = [r for r in records if r.error < max_error]
+    if not ok:
+        return None
+    key = (lambda r: r.modeled_speedup) if use_modeled else (lambda r: r.speedup)
+    return max(ok, key=key)

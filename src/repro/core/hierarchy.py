@@ -1,0 +1,93 @@
+"""Hierarchical decision-making (paper section 3.1.2, 3.3).
+
+The paper implements thread/warp/block "majority-rules" voting with CUDA
+``ballot`` + ``popcount`` intrinsics. TPUs have no warp intrinsics; the vote is
+a masked reduction over the decision group (DESIGN.md section 2), which on TPU is
+essentially free next to the MXU work the vote can skip.
+
+Semantics (paper): when the majority of a group's elements meet the activation
+criteria, the ENTIRE group approximates; otherwise ALL elements take the
+accurate path. A group vote can therefore force elements whose own criteria
+were unmet to approximate (paper section 4, LavaMD discussion) -- this is
+intentional and is what eliminates divergence.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+
+from .types import Level, TILE_SHAPE
+
+
+def grouped_majority(mask: jnp.ndarray, group_size: int, axis: int = -1) -> jnp.ndarray:
+    """Majority-rules vote within contiguous groups of `group_size` along `axis`.
+
+    Returns a mask of the same shape where every element carries its group's
+    collective decision. `group_size` must divide the axis length.
+    Majority = strictly more than half (ties -> accurate path), matching the
+    paper's "if the majority of threads can approximate, the entire block
+    follows suit".
+    """
+    axis = axis % mask.ndim
+    n = mask.shape[axis]
+    if group_size <= 1:
+        return mask
+    if n % group_size != 0:
+        raise ValueError(f"group_size {group_size} must divide axis length {n}")
+    new_shape = mask.shape[:axis] + (n // group_size, group_size) + mask.shape[axis + 1:]
+    grouped = mask.reshape(new_shape)
+    votes = jnp.sum(grouped, axis=axis + 1, keepdims=True)  # ballot+popcount
+    decision = votes * 2 > group_size
+    return jnp.broadcast_to(decision, new_shape).reshape(mask.shape)
+
+
+def block_majority(mask: jnp.ndarray) -> jnp.ndarray:
+    """Whole-array (block/team-level) vote. Returns a scalar bool.
+
+    Scalar-ness matters: a scalar decision can drive ``lax.cond`` /
+    ``@pl.when`` and therefore actually skip compute on TPU.
+    """
+    votes = jnp.sum(mask)
+    return votes * 2 > mask.size
+
+
+def vote(mask: jnp.ndarray, level: Level,
+         tile_size: Optional[int] = None) -> jnp.ndarray:
+    """Apply the hierarchy vote for `level` to a flat per-element mask.
+
+    ELEMENT: identity (paper: per-thread decisions).
+    TILE:    contiguous groups of `tile_size` (default: 128 lanes -- one VREG
+             row; pass 1024 for a full 8x128 tile).
+    BLOCK:   one decision for the whole mask, broadcast back.
+    """
+    if level == Level.ELEMENT:
+        return mask
+    if level == Level.TILE:
+        ts = tile_size or TILE_SHAPE[1]
+        if mask.size % ts != 0:
+            # pad with False (accurate) votes so stragglers bias to accuracy
+            pad = (-mask.size) % ts
+            flat = jnp.concatenate([mask.reshape(-1), jnp.zeros((pad,), bool)])
+            voted = grouped_majority(flat, ts)
+            return voted[: mask.size].reshape(mask.shape)
+        flat = mask.reshape(-1)
+        return grouped_majority(flat, ts).reshape(mask.shape)
+    if level == Level.BLOCK:
+        return jnp.broadcast_to(block_majority(mask), mask.shape)
+    raise ValueError(f"unknown level: {level}")
+
+
+def tile_vote_2d(mask: jnp.ndarray, tile_shape: Tuple[int, int] = TILE_SHAPE) -> jnp.ndarray:
+    """2-D tile vote used inside Pallas kernels where the decision unit is a
+    (sublane, lane) = (8, 128) VREG tile."""
+    r, c = mask.shape[-2:], None
+    th, tw = tile_shape
+    h, w = mask.shape[-2], mask.shape[-1]
+    if h % th or w % tw:
+        raise ValueError(f"mask {mask.shape} not divisible by tile {tile_shape}")
+    lead = mask.shape[:-2]
+    g = mask.reshape(lead + (h // th, th, w // tw, tw))
+    votes = jnp.sum(g, axis=(-3, -1), keepdims=True)
+    decision = votes * 2 > (th * tw)
+    return jnp.broadcast_to(decision, g.shape).reshape(mask.shape)

@@ -1,0 +1,182 @@
+"""iACT: approximate input memoization -- paper sections 2.3, 3.1.4, 3.3.
+
+Cache (input, output) pairs per table; a new invocation whose input lies
+within `threshold` Euclidean distance of a cached input returns the cached
+output, skipping the region.
+
+GPU adaptations reproduced here:
+  * Table sharing (paper `tperwarp` -> `tables_per_block`): elements are
+    partitioned into groups that share one table, trading memory for a larger
+    *aggregate* table and cross-element value reuse (paper section 3.1.4 advantages
+    (1)-(3)).
+  * Two-phase access (paper section 3.3): a read phase where all elements probe
+    their table, then a write phase where a SINGLE writer per table -- the
+    element with the largest distance from any table value -- inserts, with
+    round-robin replacement. (Paper footnote 3: CLOCK gave no benefit.)
+  * Hierarchical activation: the hit mask is voted per Level before use.
+
+Like TAF, state is a pytree: usable under scan or as VMEM scratch in the
+Pallas kernel variant (kernels/iact_memo.py).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hierarchy
+from .types import IACTParams, Level
+
+
+class IACTState(NamedTuple):
+    """`n_tables` memo tables of `table_size` entries each."""
+
+    keys: jnp.ndarray       # (T, S, in_dim) cached inputs
+    values: jnp.ndarray     # (T, S, *out_shape) cached outputs
+    valid: jnp.ndarray      # (T, S) bool
+    next_slot: jnp.ndarray  # (T,) int32 round-robin cursor
+
+
+def init(params: IACTParams, n_tables: int, in_dim: int,
+         out_shape: Tuple[int, ...] = (), dtype=jnp.float32) -> IACTState:
+    return IACTState(
+        keys=jnp.zeros((n_tables, params.table_size, in_dim), jnp.float32),
+        values=jnp.zeros((n_tables, params.table_size) + tuple(out_shape), dtype),
+        valid=jnp.zeros((n_tables, params.table_size), bool),
+        next_slot=jnp.zeros((n_tables,), jnp.int32),
+    )
+
+
+def n_tables_for(params: IACTParams, n_elements: int) -> int:
+    """Paper `tperwarp` semantics: tables per decision block of elements.
+
+    tables_per_block == 0 -> one private table per element (paper default of
+    one per thread). Otherwise `tables_per_block` tables serve each block of
+    `block` elements; we normalize to a whole-population table count.
+    """
+    if params.tables_per_block == 0:
+        return n_elements
+    return max(1, min(n_elements, params.tables_per_block))
+
+
+def _read_phase(state: IACTState, x: jnp.ndarray, params: IACTParams):
+    """All elements probe their table. x: (T, G, in_dim) grouped inputs.
+
+    Returns (hit (T,G), best_value (T,G,*out), min_dist (T,G)).
+    """
+    # distances: (T, G, S)
+    diff = x[:, :, None, :] - state.keys[:, None, :, :]
+    dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+    dist = jnp.where(state.valid[:, None, :], dist, jnp.inf)
+    best = jnp.argmin(dist, axis=-1)                       # (T, G)
+    min_dist = jnp.take_along_axis(dist, best[..., None], axis=-1)[..., 0]
+    best_value = jnp.take_along_axis(
+        state.values, best.reshape(best.shape + (1,) * (state.values.ndim - 2)),
+        axis=1)
+    hit = min_dist < params.threshold
+    return hit, best_value, min_dist
+
+
+def _write_phase(state: IACTState, x: jnp.ndarray, y: jnp.ndarray,
+                 computed: jnp.ndarray, min_dist: jnp.ndarray) -> IACTState:
+    """Single writer per table: the computed element farthest from any cached
+    value inserts at the round-robin cursor (paper section 3.3)."""
+    neg_inf = jnp.float32(-jnp.inf)
+    score = jnp.where(computed, jnp.where(jnp.isinf(min_dist),
+                                          jnp.float32(jnp.finfo(jnp.float32).max),
+                                          min_dist), neg_inf)
+    writer = jnp.argmax(score, axis=1)                      # (T,)
+    any_writer = jnp.any(computed, axis=1)                  # (T,)
+    t_idx = jnp.arange(state.keys.shape[0])
+    wx = x[t_idx, writer]                                   # (T, in_dim)
+    wy = y[t_idx, writer]                                   # (T, *out)
+    slot = state.next_slot                                  # (T,)
+    keys = state.keys.at[t_idx, slot].set(
+        jnp.where(any_writer[:, None], wx, state.keys[t_idx, slot]))
+    values = state.values.at[t_idx, slot].set(
+        jnp.where(any_writer.reshape((-1,) + (1,) * (state.values.ndim - 2)),
+                  wy, state.values[t_idx, slot]))
+    valid = state.valid.at[t_idx, slot].set(
+        state.valid[t_idx, slot] | any_writer)
+    next_slot = jnp.where(any_writer,
+                          (slot + 1) % state.keys.shape[1], slot)
+    return IACTState(keys, values, valid, next_slot)
+
+
+def step(state: IACTState, x: jnp.ndarray,
+         accurate_fn: Callable[[jnp.ndarray], jnp.ndarray],
+         params: IACTParams, level: Level = Level.ELEMENT,
+         tile_size: Optional[int] = None):
+    """One invocation over all
+
+    elements. x: (N, in_dim); accurate_fn: (N, in_dim) -> (N, *out).
+    Elements are grouped contiguously onto tables: group g = elements
+    [g*G, (g+1)*G) where G = N / n_tables.
+
+    Returns (outputs (N, *out), new_state, approx_mask (N,)).
+    """
+    T = state.keys.shape[0]
+    N = x.shape[0]
+    if N % T != 0:
+        raise ValueError(f"n_elements {N} must be divisible by n_tables {T}")
+    G = N // T
+    xg = x.reshape(T, G, -1).astype(jnp.float32)
+
+    hit, best_value, min_dist = _read_phase(state, xg, params)
+    approx_mask = hierarchy.vote(hit.reshape(-1), level, tile_size=tile_size)
+    approx_g = approx_mask.reshape(T, G)
+
+    if level == Level.BLOCK:
+        # Scalar decision: genuinely skip the accurate path when possible.
+        decision = hierarchy.block_majority(hit.reshape(-1))
+
+        def approx_branch(st):
+            out = best_value  # every element takes its nearest cached value
+            return out.reshape((N,) + out.shape[2:]), st
+
+        def accurate_branch(st):
+            y = accurate_fn(x)
+            yg = y.reshape((T, G) + y.shape[1:])
+            computed = jnp.ones((T, G), bool)
+            st2 = _write_phase(st, xg, yg.astype(st.values.dtype), computed,
+                               min_dist)
+            return y.astype(st.values.dtype), st2
+
+        out, new_state = jax.lax.cond(decision, approx_branch, accurate_branch,
+                                      state)
+        return out, new_state, jnp.broadcast_to(decision, (N,))
+
+    # ELEMENT / TILE: dense compute + select. iACT "must always pay the cost
+    # of deciding whether to approximate" (paper Insight 4) -- and on a vector
+    # unit it here also pays the masked compute; the Pallas kernel variant
+    # recovers real savings at block granularity.
+    y = accurate_fn(x)
+    yg = y.reshape((T, G) + y.shape[1:]).astype(state.values.dtype)
+    sel = approx_g.reshape(approx_g.shape + (1,) * (yg.ndim - 2))
+    out_g = jnp.where(sel, best_value, yg)
+    computed = ~approx_g
+    new_state = _write_phase(state, xg, yg, computed, min_dist)
+    return out_g.reshape((N,) + yg.shape[2:]), new_state, approx_mask
+
+
+def run_sequence(params: IACTParams, xs: jnp.ndarray,
+                 fn: Callable[[jnp.ndarray], jnp.ndarray],
+                 level: Level = Level.ELEMENT,
+                 tile_size: Optional[int] = None):
+    """Scan `step` over invocations xs: (T_steps, N, in_dim).
+
+    Returns (outputs, final_state, approx_fraction).
+    """
+    n = xs.shape[1]
+    n_tab = n_tables_for(params, n)
+    probe = jax.eval_shape(fn, jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype))
+    state0 = init(params, n_tab, xs.shape[-1], probe.shape[1:], probe.dtype)
+
+    def body(state, x_t):
+        out, new_state, mask = step(state, x_t, fn, params, level,
+                                    tile_size=tile_size)
+        return new_state, (out, mask)
+
+    final, (ys, masks) = jax.lax.scan(body, state0, xs)
+    return ys, final, jnp.mean(masks.astype(jnp.float32))

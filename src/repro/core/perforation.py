@@ -1,0 +1,104 @@
+"""Loop perforation -- paper sections 2.3, 3.1.5.
+
+Patterns:
+  small(M): skip one of every M iterations.
+  large(M): execute one of every M iterations.
+  ini(f) / fini(f): drop the first / last fraction f of iterations
+      (implemented, as in the paper, by changing the loop bounds).
+  random(f): drop a pseudo-random fraction (HPAC parity).
+
+Herded perforation (paper's GPU contribution, section 3.1.5): every element drops
+the SAME iterations, so control flow is uniform across the machine. On TPU
+this is what converts perforation from masking (zero savings) into a
+*structurally smaller loop*: the kept-iteration set is static, so we simply
+build shorter iteration spaces / skip whole blocks under ``@pl.when``.
+Non-herded masks are provided for the error study (each element phase-shifts
+its skip pattern, modeling per-thread counters).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from .types import PerforationKind, PerforationParams
+
+
+def execute_mask(n_iters: int, params: PerforationParams) -> np.ndarray:
+    """Static (host-side) bool mask, True = execute iteration. Herded view:
+    identical for every element, hence a single 1-D mask."""
+    i = np.arange(n_iters)
+    k = params.kind
+    if k == PerforationKind.SMALL:
+        mask = (i % params.skip) != (params.skip - 1)
+    elif k == PerforationKind.LARGE:
+        mask = (i % params.skip) == 0
+    elif k == PerforationKind.INI:
+        mask = i >= int(np.floor(params.fraction * n_iters))
+    elif k == PerforationKind.FINI:
+        mask = i < (n_iters - int(np.floor(params.fraction * n_iters)))
+    elif k == PerforationKind.RANDOM:
+        rng = np.random.RandomState(params.seed)
+        mask = rng.uniform(size=n_iters) >= params.fraction
+    else:
+        raise ValueError(f"unknown perforation kind {k}")
+    return mask
+
+
+def kept_indices(n_iters: int, params: PerforationParams) -> np.ndarray:
+    """Indices of executed iterations -- the structural form used to build a
+    genuinely smaller loop (herded perforation's payoff on TPU)."""
+    return np.nonzero(execute_mask(n_iters, params))[0]
+
+
+def element_masks(n_iters: int, n_elements: int,
+                  params: PerforationParams) -> np.ndarray:
+    """(n_elements, n_iters) masks. Herded: all rows identical. Non-herded:
+    row e is phase-shifted by e (models private per-thread counters whose
+    region-encounter counts differ across threads -- the divergent case the
+    paper's herding eliminates)."""
+    base = execute_mask(n_iters, params)
+    if params.herded:
+        return np.broadcast_to(base, (n_elements, n_iters)).copy()
+    if params.kind in (PerforationKind.SMALL, PerforationKind.LARGE):
+        rows = [np.roll(base, e % params.skip) for e in range(n_elements)]
+        return np.stack(rows)
+    if params.kind == PerforationKind.RANDOM:
+        rows = []
+        for e in range(n_elements):
+            rng = np.random.RandomState(params.seed + e)
+            rows.append(rng.uniform(size=n_iters) >= params.fraction)
+        return np.stack(rows)
+    # ini/fini change loop bounds; they are inherently uniform.
+    return np.broadcast_to(base, (n_elements, n_iters)).copy()
+
+
+def perforated_bounds(n_iters: int, params: PerforationParams) -> Tuple[int, int]:
+    """Loop bounds for ini/fini (paper: 'the compiler generates code to change
+    the lower or upper bounds of the loop')."""
+    if params.kind == PerforationKind.INI:
+        return int(np.floor(params.fraction * n_iters)), n_iters
+    if params.kind == PerforationKind.FINI:
+        return 0, n_iters - int(np.floor(params.fraction * n_iters))
+    raise ValueError("perforated_bounds applies to ini/fini only")
+
+
+def drop_fraction(n_iters: int, params: PerforationParams) -> float:
+    """Fraction of iterations dropped = upper bound on FLOP savings."""
+    return 1.0 - float(execute_mask(n_iters, params).mean())
+
+
+def perforated_sum(xs: jnp.ndarray, params: PerforationParams,
+                   axis: int = 0, rescale: bool = True) -> jnp.ndarray:
+    """Reduce `xs` over `axis` using only kept iterations.
+
+    `rescale` multiplies by n/kept -- the standard perforation extrapolation
+    for additive reductions so the magnitude of the QoI is preserved.
+    """
+    keep = kept_indices(xs.shape[axis], params)
+    sub = jnp.take(xs, jnp.asarray(keep), axis=axis)
+    total = jnp.sum(sub, axis=axis)
+    if rescale and len(keep) > 0:
+        total = total * (xs.shape[axis] / len(keep))
+    return total

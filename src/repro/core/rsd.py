@@ -1,0 +1,42 @@
+"""Relative standard deviation (RSD) -- TAF's activation statistic.
+
+Paper footnote 1: RSD = sigma / mu for *population* standard deviation sigma
+and population mean mu, computed over the sliding window of the last
+`history_size` outputs of the accurate path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rsd(window: jnp.ndarray, axis: int = -1, eps: float = 1e-12) -> jnp.ndarray:
+    """Population RSD along `axis`. Safe at mu ~ 0 (returns sigma/eps-scale).
+
+    RSD is scale-invariant: rsd(c*x) == rsd(x) for c > 0 (property-tested).
+    """
+    mu = jnp.mean(window, axis=axis)
+    sigma = jnp.std(window, axis=axis)  # population std (ddof=0)
+    return sigma / jnp.maximum(jnp.abs(mu), eps)
+
+
+def rsd_scalar_summary(outputs: jnp.ndarray) -> jnp.ndarray:
+    """Reduce a (possibly vector-valued) region output to the scalar tracked
+    by the TAF window.
+
+    The paper's TAF tracks scalar function outputs. For tensor-valued code
+    regions (FFN tiles, block outputs) we track the mean -- the natural
+    region summary; the memoized *value* is still the full tensor.
+    """
+    return jnp.mean(outputs, axis=tuple(range(1, outputs.ndim))) if outputs.ndim > 1 \
+        else outputs
+
+
+def welford_update(count, mean, m2, new_value):
+    """Streaming mean/variance update (Welford). Used by the O(1)-memory TAF
+    variant in the Pallas kernel where a full window does not fit VMEM."""
+    count = count + 1
+    delta = new_value - mean
+    mean = mean + delta / count
+    delta2 = new_value - mean
+    m2 = m2 + delta * delta2
+    return count, mean, m2

@@ -1,0 +1,165 @@
+"""TAF: Temporal Approximate Function (output) memoization -- paper section 3.1.3.
+
+State machine (paper section 2.3 + TAF [51]):
+
+  ACCURATE: run the accurate path, push the output's scalar summary into a
+            sliding window of the last `history_size` outputs. Once the window
+            is full and RSD(window) < rsd_threshold, enter STABLE.
+  STABLE:   approximate (return the last accurately-computed output) for the
+            next `prediction_size` invocations, then fall back to ACCURATE.
+
+GPU adaptation reproduced here (paper Figure 4d): each *element* (GPU thread ->
+TPU lane slot) tracks its own state across its grid-stride iterations; no
+inter-element dependencies, trading TAF's spatial-locality assumption for
+parallelism. The state is a pytree so it can be carried through ``lax.scan``
+(training/serving steps) or live in VMEM scratch (Pallas kernel variant).
+
+Hierarchical voting (level=TILE/BLOCK) follows paper section 3.3: the group
+approximates iff the majority of its elements' activation criteria hold.
+BLOCK-level decisions are scalar and drive ``lax.cond`` -- the only mode that
+actually skips FLOPs on a vector machine (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import hierarchy
+from .rsd import rsd
+from .types import Level, TAFParams
+
+
+class TAFState(NamedTuple):
+    """Per-element TAF state. Leading dims = element slots (e.g. (N,))."""
+
+    window: jnp.ndarray     # (..., history_size) recent accurate summaries
+    filled: jnp.ndarray     # (...,) int32: valid entries in window (<= hSize)
+    remaining: jnp.ndarray  # (...,) int32: approximations left in STABLE regime
+    memo: jnp.ndarray       # (..., *out_shape) last accurate output
+
+    @property
+    def in_stable_regime(self) -> jnp.ndarray:
+        return self.remaining > 0
+
+
+def init(params: TAFParams, n_elements: int, out_shape: Tuple[int, ...] = (),
+         dtype=jnp.float32) -> TAFState:
+    """Fresh (all-ACCURATE) TAF state for `n_elements` slots.
+
+    Memory per slot = history_size + prod(out_shape) scalars: this is the
+    paper's Figure-3 argument -- state is sized by decision slots (bounded by
+    what is resident), never by total logical iterations.
+    """
+    return TAFState(
+        window=jnp.zeros((n_elements, params.history_size), jnp.float32),
+        filled=jnp.zeros((n_elements,), jnp.int32),
+        remaining=jnp.zeros((n_elements,), jnp.int32),
+        memo=jnp.zeros((n_elements,) + tuple(out_shape), dtype),
+    )
+
+
+def activation(state: TAFState) -> jnp.ndarray:
+    """Per-element activation criterion: approximate while in STABLE regime."""
+    return state.remaining > 0
+
+
+def _summary(y: jnp.ndarray) -> jnp.ndarray:
+    """Scalar summary per element of a (N, ...) accurate output."""
+    if y.ndim == 1:
+        return y.astype(jnp.float32)
+    return jnp.mean(y.astype(jnp.float32), axis=tuple(range(1, y.ndim)))
+
+
+def _post_accurate(state: TAFState, y: jnp.ndarray, params: TAFParams,
+                   updated_mask: jnp.ndarray) -> TAFState:
+    """Window push + regime evaluation for elements that ran accurately."""
+    s = _summary(y)
+    new_window = jnp.concatenate(
+        [state.window[:, 1:], s[:, None]], axis=1)
+    window = jnp.where(updated_mask[:, None], new_window, state.window)
+    filled = jnp.where(updated_mask,
+                       jnp.minimum(state.filled + 1, params.history_size),
+                       state.filled)
+    # Regime check only for slots that just ran accurately with a full window.
+    window_rsd = rsd(window, axis=1)
+    stable = (window_rsd < params.rsd_threshold) & (filled >= params.history_size)
+    remaining = jnp.where(updated_mask & stable,
+                          jnp.int32(params.prediction_size), state.remaining)
+    bmask = updated_mask.reshape(updated_mask.shape + (1,) * (y.ndim - 1))
+    memo = jnp.where(bmask, y.astype(state.memo.dtype), state.memo)
+    return TAFState(window, filled, remaining, memo)
+
+
+def step(state: TAFState, accurate_fn: Callable[[], jnp.ndarray],
+         params: TAFParams, level: Level = Level.ELEMENT,
+         tile_size: Optional[int] = None) -> Tuple[jnp.ndarray, TAFState, jnp.ndarray]:
+    """One invocation of a TAF-approximated region over all element slots.
+
+    accurate_fn: () -> (N, ...) accurate outputs for every slot.
+
+    Returns (outputs, new_state, approx_mask).
+
+    ELEMENT/TILE levels: the accurate path is evaluated for all slots and
+    masked (a TPU vector unit cannot skip per-lane work -- the paper's
+    divergence cost, in masking form). BLOCK level: a scalar vote drives
+    ``lax.cond`` so the accurate path is *genuinely skipped* when the block
+    approximates -- the paper's divergence-free fast path.
+    """
+    elem_act = activation(state)
+    approx_mask = hierarchy.vote(elem_act, level, tile_size=tile_size)
+
+    if level == Level.BLOCK:
+        block_decision = hierarchy.block_majority(elem_act)
+
+        def approx_branch(st: TAFState):
+            rem = jnp.maximum(st.remaining - 1, 0)
+            return st.memo, st._replace(remaining=rem)
+
+        def accurate_branch(st: TAFState):
+            y = accurate_fn()
+            new_st = _post_accurate(st, y, params,
+                                    jnp.ones_like(elem_act))
+            return y.astype(st.memo.dtype), new_st
+
+        out, new_state = jax.lax.cond(block_decision, approx_branch,
+                                      accurate_branch, state)
+        return out, new_state, jnp.broadcast_to(block_decision, elem_act.shape)
+
+    # ELEMENT / TILE: dense evaluation + select (masking semantics).
+    y = accurate_fn()
+    bmask = approx_mask.reshape(approx_mask.shape + (1,) * (y.ndim - 1))
+    out = jnp.where(bmask, state.memo, y.astype(state.memo.dtype))
+    # Approximating slots burn one prediction credit (even if group-forced
+    # with remaining == 0: clamp at 0, matching the runtime's saturating
+    # counter); accurate slots update window/memo/regime.
+    new_state = _post_accurate(state, y, params, ~approx_mask)
+    remaining = jnp.where(approx_mask,
+                          jnp.maximum(new_state.remaining - 1, 0),
+                          new_state.remaining)
+    return out, new_state._replace(remaining=remaining), approx_mask
+
+
+def run_sequence(params: TAFParams, xs: jnp.ndarray,
+                 fn: Callable[[jnp.ndarray], jnp.ndarray],
+                 level: Level = Level.ELEMENT,
+                 out_shape: Tuple[int, ...] = (),
+                 tile_size: Optional[int] = None):
+    """Apply fn over a sequence of invocations (T, N, ...) with TAF, via scan.
+
+    This is the grid-stride-loop shape of paper Figure 4(d): invocation t of
+    element n corresponds to grid-stride iteration t of GPU thread n.
+    Returns (outputs (T, N, ...), final_state, approx_fraction scalar).
+    """
+    n = xs.shape[1]
+    probe = jax.eval_shape(fn, jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype))
+    state0 = init(params, n, probe.shape[1:], probe.dtype)
+
+    def body(state, x_t):
+        out, new_state, mask = step(state, lambda: fn(x_t), params, level,
+                                    tile_size=tile_size)
+        return new_state, (out, mask)
+
+    final, (ys, masks) = jax.lax.scan(body, state0, xs)
+    return ys, final, jnp.mean(masks.astype(jnp.float32))

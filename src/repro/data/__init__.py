@@ -1,0 +1,3 @@
+from .pipeline import DataConfig, PrefetchIterator, SyntheticLM
+
+__all__ = ["DataConfig", "PrefetchIterator", "SyntheticLM"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the HPAC-Offload hot paths.
+
+Four kernels, each the TPU re-derivation of one paper mechanism:
+  taf_matmul            -- section 3.1.3 TAF with VMEM-scratch state machine
+  iact_memo             -- section 3.1.4 iACT with VMEM memo tables, two-phase update
+  perforated_matmul     -- section 3.1.5 herded perforation of the K loop
+  perforated_attention  -- section 3.1.5 herded KV-block perforation / flash attn
+
+ops.py  -- jit'd wrappers (auto interpret on CPU)
+ref.py  -- pure-jnp oracles with identical block semantics
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

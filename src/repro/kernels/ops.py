@@ -1,0 +1,70 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On this CPU container the kernels run in interpret mode (`interpret=True`
+executes the kernel body in Python for validation); on TPU they compile to
+Mosaic. `ON_TPU` flips automatically; `ref.py` provides the oracles used by
+tests and by the pure-jnp model paths.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import PerforationParams
+from . import ref
+from .iact_memo import iact_rowfn as _iact_rowfn
+from .perforated_attention import perforated_attention as _perf_attention
+from .perforated_matmul import perforated_matmul as _perf_matmul
+from .taf_matmul import taf_matmul as _taf_matmul
+
+ON_TPU = jax.default_backend() == "tpu"
+
+
+def _interp(override: Optional[bool]) -> bool:
+    return (not ON_TPU) if override is None else override
+
+
+def taf_matmul(x, w, *, block_m=128, block_n=128, history_size=3,
+               prediction_size=8, rsd_threshold=0.5, out_dtype=jnp.float32,
+               interpret: Optional[bool] = None):
+    return _taf_matmul(x, w, block_m=block_m, block_n=block_n,
+                       history_size=history_size,
+                       prediction_size=prediction_size,
+                       rsd_threshold=rsd_threshold, out_dtype=out_dtype,
+                       interpret=_interp(interpret))
+
+
+def iact_rowfn(x, w1, w2, *, block_rows=128, table_size=4, threshold=0.5,
+               out_dtype=jnp.float32, interpret: Optional[bool] = None):
+    return _iact_rowfn(x, w1, w2, block_rows=block_rows,
+                       table_size=table_size, threshold=threshold,
+                       out_dtype=out_dtype, interpret=_interp(interpret))
+
+
+def perforated_matmul(x, w, *, block_m=128, block_n=128, block_k=128,
+                      perfo: Optional[PerforationParams] = None,
+                      rescale=False, out_dtype=jnp.float32,
+                      interpret: Optional[bool] = None):
+    return _perf_matmul(x, w, block_m=block_m, block_n=block_n,
+                        block_k=block_k, perfo=perfo, rescale=rescale,
+                        out_dtype=out_dtype, interpret=_interp(interpret))
+
+
+def perforated_attention(q, k, v, *, block_q=128, block_kv=128,
+                         perfo: Optional[PerforationParams] = None,
+                         causal=True, scale: Optional[float] = None,
+                         interpret: Optional[bool] = None):
+    return _perf_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                           perfo=perfo, causal=causal, scale=scale,
+                           interpret=_interp(interpret))
+
+
+def flash_attention(q, k, v, *, block_q=128, block_kv=128, causal=True,
+                    scale: Optional[float] = None,
+                    interpret: Optional[bool] = None):
+    """Standard causal flash attention == perforated_attention with no drops."""
+    return _perf_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                           perfo=None, causal=causal, scale=scale,
+                           interpret=_interp(interpret))

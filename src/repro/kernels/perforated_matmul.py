@@ -1,0 +1,87 @@
+"""Herded-perforated matmul Pallas kernel (paper section 3.1.5 on TPU).
+
+Drops the SAME K-blocks of the contraction for every output tile. Because the
+kept set is shared ("herded"), the grid is simply *shorter*: dropped blocks
+are never scheduled, so -- unlike per-element (divergent) perforation, which
+on a vector machine saves nothing -- the FLOP savings are structural:
+executed_flops = kept/total * full_flops.
+
+The kept-block list arrives via TPU scalar prefetch
+(``pltpu.PrefetchScalarGridSpec``): the index maps read ``kept_ref[kk]`` so
+the DMA engine fetches exactly the kept tiles; control flow is perfectly
+uniform (no ``@pl.when`` on the hot path).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.perforation import kept_indices
+from repro.core.types import PerforationParams
+
+
+def _perf_matmul_kernel(kept_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                        n_kept: int, rescale_factor: float):
+    del kept_ref  # consumed by the index maps
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            w_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_kept - 1)
+    def _fini():
+        o_ref[...] = (acc_ref[...] * rescale_factor).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "block_k", "perfo", "rescale", "out_dtype",
+    "interpret"))
+def perforated_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
+                      block_n: int = 128, block_k: int = 128,
+                      perfo: Optional[PerforationParams] = None,
+                      rescale: bool = False, out_dtype=jnp.float32,
+                      interpret: bool = False) -> jnp.ndarray:
+    """Y ~= X @ W computing only the kept K-blocks (herded perforation)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    nk = k // block_k
+    kept = np.arange(nk) if perfo is None else kept_indices(nk, perfo)
+    if len(kept) == 0:
+        raise ValueError("perforation dropped every K block")
+    kept_arr = jnp.asarray(kept, jnp.int32)
+    n_kept = len(kept)
+    factor = (nk / n_kept) if rescale else 1.0
+
+    kernel = functools.partial(_perf_matmul_kernel, n_kept=n_kept,
+                               rescale_factor=factor)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // block_m, n // block_n, n_kept),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k),
+                         lambda i, j, kk, kept_ref: (i, kept_ref[kk])),
+            pl.BlockSpec((block_k, block_n),
+                         lambda i, j, kk, kept_ref: (kept_ref[kk], j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n),
+                               lambda i, j, kk, kept_ref: (i, j)),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(kept_arr, x, w)

@@ -1,0 +1,205 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each `*_ref` implements the exact block-level semantics of the corresponding
+kernel (same block partitioning, same TAF/iACT state evolution, same
+perforation sets) so tests can `assert_allclose` kernel-vs-ref across shape
+and dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.perforation import kept_indices
+from repro.core.types import PerforationParams
+
+
+# ----------------------------------------------------------------------------
+# plain matmul
+# ----------------------------------------------------------------------------
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray,
+               out_dtype=jnp.float32) -> jnp.ndarray:
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32)).astype(out_dtype)
+
+
+# ----------------------------------------------------------------------------
+# TAF matmul (block-level output memoization across row-blocks)
+# ----------------------------------------------------------------------------
+
+def taf_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int,
+                   block_n: int, history_size: int, prediction_size: int,
+                   rsd_threshold: float,
+                   out_dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels/taf_matmul.py.
+
+    Grid semantics: for each column-block j, row-blocks i = 0..M/bm-1 are a
+    temporal sequence of invocations of "the region" (paper Fig. 4d: the
+    core's grid-stride loop). Block-level TAF state per j:
+      window of last `history_size` block means; when RSD < threshold the
+      next `prediction_size` row-blocks reuse the memoized block output.
+    Returns (y, approx_mask) where approx_mask is (M/bm, N/bn) bool.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and m % block_m == 0 and n % block_n == 0
+    num_i, num_j = m // block_m, n // block_n
+    xf = np.asarray(x, np.float32)
+    wf = np.asarray(w, np.float32)
+    y = np.zeros((m, n), np.float32)
+    approx = np.zeros((num_i, num_j), bool)
+    for j in range(num_j):
+        window: list = []
+        remaining = 0
+        memo = np.zeros((block_m, block_n), np.float32)
+        for i in range(num_i):
+            if remaining > 0:
+                y[i * block_m:(i + 1) * block_m,
+                  j * block_n:(j + 1) * block_n] = memo
+                remaining -= 1
+                approx[i, j] = True
+                continue
+            blk = xf[i * block_m:(i + 1) * block_m] @ \
+                wf[:, j * block_n:(j + 1) * block_n]
+            y[i * block_m:(i + 1) * block_m,
+              j * block_n:(j + 1) * block_n] = blk
+            memo = blk
+            window.append(float(blk.mean()))
+            window = window[-history_size:]
+            if len(window) == history_size:
+                mu = float(np.mean(window))
+                sigma = float(np.std(window))
+                if sigma / max(abs(mu), 1e-12) < rsd_threshold:
+                    remaining = prediction_size
+    return jnp.asarray(y).astype(out_dtype), jnp.asarray(approx)
+
+
+# ----------------------------------------------------------------------------
+# iACT memoized row function (two-phase, single-writer, round-robin)
+# ----------------------------------------------------------------------------
+
+def iact_rowfn_ref(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, *,
+                   block_rows: int, table_size: int, threshold: float,
+                   out_dtype=jnp.float32) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Oracle for kernels/iact_memo.py.
+
+    Region fn: y = gelu(x @ w1) @ w2 per row (an FFN tile -- the archetypal
+    "expensive device function"). Rows are processed in blocks of
+    `block_rows`; one table serves each block (tables_per_block=1); the
+    decision is block-level majority (the kernel's only real-savings mode).
+    Read phase -> vote -> (approx: nearest value | accurate: compute, then
+    single max-distance writer inserts round-robin).
+    Returns (y, block_approx_mask (num_blocks,)).
+    """
+    n, d_in = x.shape
+    d_out = w2.shape[1]
+    assert n % block_rows == 0
+    num_b = n // block_rows
+    xf = np.asarray(x, np.float32)
+    w1f = np.asarray(w1, np.float32)
+    w2f = np.asarray(w2, np.float32)
+
+    def f(rows):
+        h = rows @ w1f
+        h = 0.5 * h * (1.0 + np.tanh(np.sqrt(2 / np.pi) * (h + 0.044715 * h ** 3)))
+        return h @ w2f
+
+    keys = np.zeros((table_size, d_in), np.float32)
+    values = np.zeros((table_size, d_out), np.float32)
+    valid = np.zeros((table_size,), bool)
+    cursor = 0
+    y = np.zeros((n, d_out), np.float32)
+    approx = np.zeros((num_b,), bool)
+    for b in range(num_b):
+        rows = xf[b * block_rows:(b + 1) * block_rows]
+        if valid.any():
+            d = np.linalg.norm(rows[:, None, :] - keys[None], axis=-1)
+            d[:, ~valid] = np.inf
+            best = d.argmin(axis=1)
+            mind = d.min(axis=1)
+        else:
+            best = np.zeros((block_rows,), int)
+            mind = np.full((block_rows,), np.inf)
+        hit = mind < threshold
+        if hit.sum() * 2 > block_rows:                       # majority-rules
+            y[b * block_rows:(b + 1) * block_rows] = values[best]
+            approx[b] = True
+            continue
+        out = f(rows)
+        y[b * block_rows:(b + 1) * block_rows] = out
+        # single writer: the row farthest from any cached value
+        writer = int(np.where(np.isinf(mind), np.float32(3.4e38), mind).argmax())
+        keys[cursor] = rows[writer]
+        values[cursor] = out[writer]
+        valid[cursor] = True
+        cursor = (cursor + 1) % table_size
+    return jnp.asarray(y).astype(out_dtype), jnp.asarray(approx)
+
+
+# ----------------------------------------------------------------------------
+# herded-perforated matmul (K-block dropping)
+# ----------------------------------------------------------------------------
+
+def perforated_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, *, block_k: int,
+                          perfo: Optional[PerforationParams],
+                          rescale: bool = False,
+                          out_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for kernels/perforated_matmul.py: drop the same K-blocks from
+    the contraction for every output tile (herded -> uniform control flow)."""
+    m, k = x.shape
+    assert k % block_k == 0
+    nk = k // block_k
+    kept = list(range(nk)) if perfo is None else list(kept_indices(nk, perfo))
+    xf = x.astype(jnp.float32)
+    wf = w.astype(jnp.float32)
+    acc = jnp.zeros((m, w.shape[1]), jnp.float32)
+    for kb in kept:
+        sl = slice(kb * block_k, (kb + 1) * block_k)
+        acc = acc + xf[:, sl] @ wf[sl, :]
+    if rescale and kept:
+        acc = acc * (nk / len(kept))
+    return acc.astype(out_dtype)
+
+
+# ----------------------------------------------------------------------------
+# flash attention with herded KV-block perforation
+# ----------------------------------------------------------------------------
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, block_kv: Optional[int] = None,
+                  perfo: Optional[PerforationParams] = None,
+                  scale: Optional[float] = None,
+                  out_dtype=None) -> jnp.ndarray:
+    """Oracle for kernels/perforated_attention.py.
+
+    q: (B, H, Sq, D), k/v: (B, H, Skv, D). When `perfo` is set, whole KV
+    blocks of size `block_kv` are dropped from the softmax domain -- the
+    same blocks for every query (herded; ini == drop-oldest-context,
+    fini == drop-newest-context).
+    """
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        offset = skv - sq  # queries sit at the END of the KV timeline
+        qi = jnp.arange(sq)[:, None]
+        ki = jnp.arange(skv)[None, :]
+        mask = mask & (ki <= qi + offset)
+    if perfo is not None:
+        assert block_kv is not None and skv % block_kv == 0
+        nkv = skv // block_kv
+        keepb = np.zeros((nkv,), bool)
+        keepb[kept_indices(nkv, perfo)] = True
+        keep = np.repeat(keepb, block_kv)
+        mask = mask & jnp.asarray(keep)[None, :]
+    logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32))
+    return out.astype(out_dtype or q.dtype)

@@ -1,0 +1,118 @@
+"""TAF-memoized matmul Pallas kernel (paper sections 3.1.1, 3.1.3 on TPU).
+
+Y = X @ W over a (num_j, num_i) grid of (block_m, block_n) output tiles.
+TPU Pallas grids execute **sequentially** on a core, so for a fixed column
+block j the row blocks i = 0..num_i-1 form exactly the paper's grid-stride
+temporal sequence (Figure 4d), and VMEM/SMEM scratch is the paper's
+"shared memory" AC state (section 3.1.1): its size depends on the block shape,
+never on the total number of logical iterations.
+
+State (per column block; reset when i wraps to 0, i.e. kernel-lifetime scope):
+  window    VMEM (1, history_size) -- last accurate block-mean outputs
+  counters  SMEM (2,)              -- [filled, remaining]
+  memo      VMEM (block_m, block_n) -- last accurate block output
+
+The decision is **block-level** (paper `level(team)`): a scalar predicate
+drives ``@pl.when``, so an approximated tile genuinely skips its MXU dot --
+the divergence-free fast path that element-level masking cannot give on a
+vector machine (DESIGN.md section 2).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _taf_matmul_kernel(x_ref, w_ref, o_ref, mask_ref,
+                       window_ref, counters_ref, memo_ref, *,
+                       history_size: int, prediction_size: int,
+                       rsd_threshold: float):
+    j = pl.program_id(0)  # column block (slow axis)
+    i = pl.program_id(1)  # row block (fast axis) -- the temporal sequence
+    del j
+
+    @pl.when(i == 0)
+    def _reset():  # kernel-lifetime state scope, fresh per column block
+        counters_ref[0] = 0  # filled
+        counters_ref[1] = 0  # remaining
+        window_ref[...] = jnp.zeros_like(window_ref)
+
+    remaining = counters_ref[1]
+    approximate = remaining > 0
+
+    @pl.when(approximate)
+    def _approx_path():
+        # Return the last accurately-computed output; no MXU work at all.
+        o_ref[...] = memo_ref[...].astype(o_ref.dtype)
+        mask_ref[0, 0] = 1
+        counters_ref[1] = remaining - 1
+
+    @pl.when(jnp.logical_not(approximate))
+    def _accurate_path():
+        y = jnp.dot(x_ref[...].astype(jnp.float32),
+                    w_ref[...].astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+        o_ref[...] = y.astype(o_ref.dtype)
+        mask_ref[0, 0] = 0
+        memo_ref[...] = y
+        # Slide the RSD window (hSize is tiny: 1..5).
+        s = jnp.mean(y)
+        win = window_ref[0, :]
+        win = jnp.roll(win, -1).at[history_size - 1].set(s)
+        window_ref[0, :] = win
+        filled = jnp.minimum(counters_ref[0] + 1, history_size)
+        counters_ref[0] = filled
+        mu = jnp.mean(win)
+        sigma = jnp.sqrt(jnp.maximum(jnp.mean(win * win) - mu * mu, 0.0))
+        stable = (sigma / jnp.maximum(jnp.abs(mu), 1e-12) < rsd_threshold)
+        stable = jnp.logical_and(stable, filled >= history_size)
+        counters_ref[1] = jnp.where(stable, prediction_size, 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "block_m", "block_n", "history_size", "prediction_size", "rsd_threshold",
+    "out_dtype", "interpret"))
+def taf_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
+               block_n: int = 128, history_size: int = 3,
+               prediction_size: int = 8, rsd_threshold: float = 0.5,
+               out_dtype=jnp.float32,
+               interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (M, N), approx_mask (num_i, num_j) int32)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    assert m % block_m == 0 and n % block_n == 0
+    num_i, num_j = m // block_m, n // block_n
+
+    grid = (num_j, num_i)  # j slow, i fast: temporal sequence over row blocks
+    kernel = functools.partial(
+        _taf_matmul_kernel, history_size=history_size,
+        prediction_size=prediction_size, rsd_threshold=rsd_threshold)
+    y, mask = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, k), lambda j, i: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda j, i: (0, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, block_n), lambda j, i: (i, j)),
+            pl.BlockSpec((1, 1), lambda j, i: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((num_i, num_j), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, history_size), jnp.float32),
+            pltpu.SMEM((2,), jnp.int32),
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w)
+    return y, mask.astype(bool)

@@ -1,0 +1,4 @@
+"""Launchers: mesh definition, multi-pod dry-run, roofline, train, serve."""
+from . import mesh, specs, steps
+
+__all__ = ["mesh", "specs", "steps"]

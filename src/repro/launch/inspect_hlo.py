@@ -1,0 +1,150 @@
+"""HLO inspection CLI -- the profiling tool behind the section-Perf iterations.
+
+Lowers one (arch x shape) cell on the single-pod mesh and prints:
+  * per-op-kind output-byte histogram (ENTRY computation = HBM-relevant),
+  * the largest collectives with their op_name provenance,
+  * cost_analysis totals.
+
+  PYTHONPATH=src python -m repro.launch.inspect_hlo --arch qwen3-1.7b \
+      --shape decode_32k [--layers 2] [--top 12]
+"""
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import argparse
+import collections
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+
+_DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "pred": 1, "s8": 1,
+       "f16": 2, "s64": 8, "u8": 1}
+
+
+def op_histogram(entry_text: str):
+    agg = collections.Counter()
+    for line in entry_text.splitlines():
+        m = re.search(r"=\s+([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+                      r"([a-z0-9\-\.]+)\(", line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if dt not in _DT:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        agg[op] += n * _DT[dt]
+    return agg
+
+
+def largest_collectives(text: str, top: int):
+    from repro.runtime import hlo as hlo_mod
+    rows = []
+    for line in text.splitlines():
+        m = re.search(r"=\s+(\(?[a-z0-9][^=\n]*?)\s+(all-reduce|all-gather|"
+                      r"reduce-scatter|all-to-all|collective-permute)\(",
+                      line)
+        if m and "-done" not in line:
+            b = hlo_mod._shape_bytes(m.group(1))
+            meta = re.search(r'op_name="([^"]*)"', line)
+            rows.append((b, m.group(2),
+                         meta.group(1)[-72:] if meta else ""))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=2,
+                    help="unrolled depth for the artifact")
+    ap.add_argument("--top", type=int, default=12)
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch import specs as specs_mod
+    from repro.launch import steps as steps_mod
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import build
+    from repro.optim import adamw
+    from repro.runtime import hlo as hlo_mod
+    from repro.runtime import sharding as shardlib
+
+    mesh = make_production_mesh(multi_pod=False)
+    cfg0 = get_config(args.arch)
+    kw = {"unroll_layers": True, "n_layers": args.layers}
+    if cfg0.moe and cfg0.moe.n_dense_layers > 0:
+        kw["moe"] = dataclasses.replace(cfg0.moe, n_dense_layers=1)
+        kw["n_layers"] = max(args.layers, 2)
+    if cfg0.hybrid:
+        kw["n_layers"] = cfg0.hybrid.attn_period
+    cfg = dataclasses.replace(cfg0, **kw)
+    shape = SHAPES[args.shape]
+    model = build(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind != "train":
+        cdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            cfg.compute_dtype]
+        params_sds = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, cdt)
+                       if jnp.issubdtype(l.dtype, jnp.floating) else l),
+            params_sds)
+    fsdp_now = cfg.fsdp and shape.kind == "train"
+    p_sh = shardlib.param_shardings(mesh, params_sds, fsdp=fsdp_now)
+    with mesh:
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(adamw.init, params_sds)
+            o_sh = shardlib.opt_state_shardings(mesh, opt_sds, fsdp=fsdp_now)
+            batch = specs_mod.train_batch_specs(cfg, shape)
+            b_sh = specs_mod.batch_shardings(mesh, batch)
+            step = steps_mod.make_train_step(model, adamw.AdamWConfig())
+            compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                               out_shardings=(p_sh, o_sh, None)).lower(
+                                   params_sds, opt_sds, batch).compile()
+        elif shape.kind == "prefill":
+            batch = specs_mod.prefill_batch_specs(cfg, shape)
+            b_sh = specs_mod.batch_shardings(mesh, batch)
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_sh = shardlib.cache_shardings(mesh, cache_sds,
+                                            shape.global_batch)
+            step = steps_mod.make_prefill_step(model, shape.seq_len)
+            compiled = jax.jit(step, in_shardings=(p_sh, b_sh),
+                               out_shardings=(None, c_sh)).lower(
+                                   params_sds, batch).compile()
+        else:
+            cache_sds, tok_sds = specs_mod.decode_specs(model, cfg, shape)
+            c_sh = shardlib.cache_shardings(mesh, cache_sds,
+                                            shape.global_batch)
+            t_sh = specs_mod.batch_shardings(
+                mesh, {"tokens": tok_sds})["tokens"]
+            step = steps_mod.make_serve_step(model)
+            compiled = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, None),
+                               out_shardings=(t_sh, None, c_sh),
+                               donate_argnums=(1,)).lower(
+                                   params_sds, cache_sds, tok_sds,
+                                   jax.ShapeDtypeStruct((), jnp.int32)
+                               ).compile()
+
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    print(f"== {args.arch} / {args.shape} (unrolled depth {cfg.n_layers}) ==")
+    print(f"flops/dev: {cost.get('flops', 0):.4g}   "
+          f"bytes/dev: {cost.get('bytes accessed', 0):.4g}")
+    print(f"collectives: {hlo_mod.collective_stats(text).summary()}")
+    print("\n-- ENTRY op-kind output bytes --")
+    for op, b in op_histogram(hlo_mod.entry_text(text)).most_common(args.top):
+        print(f"  {op:26s} {b/2**30:9.3f} GiB")
+    print("\n-- largest collectives --")
+    for b, op, name in largest_collectives(text, args.top):
+        print(f"  {b/2**20:9.1f} MiB {op:18s} {name}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Render EXPERIMENTS.md tables from results/ JSON records.
+
+  PYTHONPATH=src python -m repro.launch.report [--section dryrun|roofline]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "results")
+
+
+def _load(subdir):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(RESULTS, subdir, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def _gib(b):
+    return b / 2 ** 30
+
+
+def dryrun_table() -> str:
+    recs = _load("dryrun")
+    out = ["| arch | shape | mesh | status | mem/dev GiB | HLO GFLOP/dev* | "
+           "coll MB/dev* | top collectives | compile s |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["status"] == "ok":
+            colls = ", ".join(f"{k}:{v}" for k, v in sorted(
+                r["collectives"]["counts"].items()))
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} | ok | "
+                f"{_gib(r['per_device_bytes']):.2f} | "
+                f"{r['hlo_flops_per_device']/1e9:.1f} | "
+                f"{r['collectives']['total_bytes_per_device']/1e6:.1f} | "
+                f"{colls} | {r['compile_s']} |")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                       f"{r['status']} | — | — | — | {reason} | — |")
+    out.append("")
+    out.append("*scan-form artifact: while-loop bodies counted once "
+               "(see section Roofline for composed full-depth numbers).")
+    return "\n".join(out)
+
+
+def roofline_table(tag: str = "baseline") -> str:
+    recs = [r for r in _load("roofline") if r.get("tag") == tag]
+    out = ["| arch | shape | compute s | memory s (adj) | collective s | "
+           "dominant | roofline frac | MODEL/HLO flops | one-line lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    levers = {
+        ("memory", "train"): "cut activation materializations (fuse QKV, "
+                             "bf16 norm internals, bigger attn chunks)",
+        ("memory", "decode"): "quantize the KV cache (int8) and fold "
+                              "valid-len masking into fewer passes",
+        ("memory", "prefill"): "larger attention chunks; bf16 intermediates",
+        ("collective", "train"): "shard activations 2D / reduce-scatter "
+                                 "instead of all-reduce; overlap with compute",
+        ("collective", "decode"): "keep decode TP-local (replicate small "
+                                  "caches) to remove per-step all-gathers",
+        ("compute", "train"): "drop remat recompute on cheap layers; "
+                              "herded perforation where error budget allows",
+        ("compute", "decode"): "TAF layer skipping (the paper's technique)",
+        ("compute", "prefill"): "herded KV-block perforation",
+    }
+    shapes_kind = {"train_4k": "train", "prefill_32k": "prefill",
+                   "decode_32k": "decode", "long_500k": "decode"}
+    for r in recs:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r.get('reason', 'skipped')[:40]} | — | — | — |")
+            continue
+        lever = levers.get((r["dominant"], shapes_kind[r["shape"]]), "")
+        mem = (f"{r['memory_s']:.3g} ({r['memory_adj_s']:.3g})"
+               if "memory_adj_s" in r else f"{r['memory_s']:.3g}")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3g} | "
+            f"{mem} | {r['collective_s']:.3g} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | "
+            f"{r['useful_flops_ratio']:.2f} | {lever} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--section", default="all")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table())
+        print()
+    if args.section in ("all", "roofline"):
+        print(f"### Roofline ({args.tag})\n")
+        print(roofline_table(args.tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,274 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape) on the single-pod mesh (hardware constants
+per the brief -- TPU v5e-class):
+
+  compute_s    = HLO_FLOPs_per_device / 197e12          (bf16 peak)
+  memory_s     = HLO_bytes_per_device / 819e9           (HBM bw)
+  collective_s = collective_bytes_per_device / 50e9     (ICI link bw)
+
+Scan caveat (verified empirically): XLA cost analysis counts a while body
+ONCE regardless of trip count. Terms are therefore composed from UNROLLED
+small-depth lowerings:
+
+  cost(total) = base + sum_type( n_layers_of_type x marginal_type )
+
+with marginals extracted by differencing two (or three) small-depth
+artifacts per architecture family. The full scan artifact is still compiled
+by dryrun.py for memory analysis + compile-success.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+if __name__ == "__main__":  # must precede first jax init (see dryrun.py)
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.base import ModelConfig
+from repro.launch import specs as specs_mod
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import make_production_mesh
+from repro.models import build
+from repro.optim import adamw
+from repro.runtime import hlo as hlo_mod
+from repro.runtime import sharding as shardlib
+
+# hardware constants (from the brief)
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "roofline")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    adj_bytes: float = 0.0   # bytes minus CPU-artifact convert/copy traffic
+
+    def __sub__(self, o):
+        return Cost(self.flops - o.flops, self.bytes - o.bytes,
+                    self.coll_bytes - o.coll_bytes,
+                    self.adj_bytes - o.adj_bytes)
+
+    def __add__(self, o):
+        return Cost(self.flops + o.flops, self.bytes + o.bytes,
+                    self.coll_bytes + o.coll_bytes,
+                    self.adj_bytes + o.adj_bytes)
+
+    def __mul__(self, k):
+        return Cost(self.flops * k, self.bytes * k, self.coll_bytes * k,
+                    self.adj_bytes * k)
+
+    __rmul__ = __mul__
+
+
+def _cost_of(cfg: ModelConfig, shape_name: str, mesh) -> Cost:
+    """Lower+compile one (small, UNROLLED) variant; extract per-device cost."""
+    shape = SHAPES[shape_name]
+    model = build(cfg)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    if shape.kind != "train":
+        # serving deployments cast weights to the compute dtype ONCE;
+        # inference artifacts must not pay per-step f32->bf16 converts
+        cdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[
+            cfg.compute_dtype]
+        params_sds = jax.tree.map(
+            lambda l: (jax.ShapeDtypeStruct(l.shape, cdt)
+                       if jnp.issubdtype(l.dtype, jnp.floating) else l),
+            params_sds)
+    # FSDP is a TRAINING-memory optimization; serving keeps weights
+    # TP-resident (weight re-gather per decode step would dwarf the tiny
+    # activation traffic -- measured: dsv3 decode collective 0.107->3.4s
+    # with ZeRO-3 on, section Perf iteration B5)
+    fsdp_now = cfg.fsdp and shape.kind == "train"
+    p_sh = shardlib.param_shardings(mesh, params_sds, fsdp=fsdp_now)
+    with mesh:
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(adamw.init, params_sds)
+            o_sh = shardlib.opt_state_shardings(mesh, opt_sds, fsdp=cfg.fsdp)
+            batch = specs_mod.train_batch_specs(cfg, shape)
+            b_sh = specs_mod.batch_shardings(mesh, batch)
+            step = steps_mod.make_train_step(model, adamw.AdamWConfig())
+            lowered = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh),
+                              out_shardings=(p_sh, o_sh, None)).lower(
+                                  params_sds, opt_sds, batch)
+        elif shape.kind == "prefill":
+            batch = specs_mod.prefill_batch_specs(cfg, shape)
+            b_sh = specs_mod.batch_shardings(mesh, batch)
+            cache_sds = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            c_sh = shardlib.cache_shardings(mesh, cache_sds,
+                                            shape.global_batch)
+            step = steps_mod.make_prefill_step(model, shape.seq_len)
+            lowered = jax.jit(step, in_shardings=(p_sh, b_sh),
+                              out_shardings=(None, c_sh)).lower(
+                                  params_sds, batch)
+        else:
+            cache_sds, tok_sds = specs_mod.decode_specs(model, cfg, shape)
+            c_sh = shardlib.cache_shardings(mesh, cache_sds,
+                                            shape.global_batch)
+            t_sh = specs_mod.batch_shardings(
+                mesh, {"tokens": tok_sds})["tokens"]
+            step = steps_mod.make_serve_step(model)
+            # donate the cache exactly like the production serve_step: the
+            # undonated artifact would count a full cache copy per layer
+            lowered = jax.jit(step, in_shardings=(p_sh, c_sh, t_sh, None),
+                              out_shardings=(t_sh, None, c_sh),
+                              donate_argnums=(1,)).lower(
+                                  params_sds, cache_sds, tok_sds,
+                                  jax.ShapeDtypeStruct((), jnp.int32))
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis() or {}
+    text = compiled.as_text()
+    coll = hlo_mod.collective_stats(text)
+    raw_bytes = float(cost.get("bytes accessed", 0.0))
+    adj = max(raw_bytes - hlo_mod.convert_bytes(text), 0.0)
+    return Cost(float(cost.get("flops", 0.0)), raw_bytes,
+                float(coll.total_bytes), adj)
+
+
+def _variant(cfg: ModelConfig, **kw) -> ModelConfig:
+    return dataclasses.replace(cfg, unroll_layers=True, **kw)
+
+
+def composed_cost(arch: str, shape_name: str, mesh,
+                  cfg: Optional[ModelConfig] = None
+                  ) -> Tuple[Cost, Dict[str, float]]:
+    """Compose full-depth per-device cost from unrolled marginal artifacts."""
+    cfg = cfg if cfg is not None else get_config(arch)
+    fam = cfg.family
+    detail: Dict[str, float] = {}
+    if fam == "moe" and cfg.moe.n_dense_layers > 0:
+        # three-point solve: cost(d,m) = base + d*D + m*M
+        import dataclasses as dc
+        a = _cost_of(_variant(cfg, n_layers=2,
+                              moe=dc.replace(cfg.moe, n_dense_layers=1)),
+                     shape_name, mesh)                       # (1,1)
+        b = _cost_of(_variant(cfg, n_layers=3,
+                              moe=dc.replace(cfg.moe, n_dense_layers=2)),
+                     shape_name, mesh)                       # (2,1)
+        c = _cost_of(_variant(cfg, n_layers=3,
+                              moe=dc.replace(cfg.moe, n_dense_layers=1)),
+                     shape_name, mesh)                       # (1,2)
+        d_marg = b - a
+        m_marg = c - a
+        base = a - d_marg - m_marg
+        nd = cfg.moe.n_dense_layers
+        nm = cfg.n_layers - nd
+        total = base + nd * d_marg + nm * m_marg
+        detail = {"dense_marginal_flops": d_marg.flops,
+                  "moe_marginal_flops": m_marg.flops, "n_dense": nd,
+                  "n_moe": nm}
+    elif fam == "hybrid":
+        period = cfg.hybrid.attn_period
+        a = _cost_of(_variant(cfg, n_layers=period), shape_name, mesh)
+        b = _cost_of(_variant(cfg, n_layers=2 * period), shape_name, mesh)
+        c = _cost_of(_variant(cfg, n_layers=period + 1), shape_name, mesh)
+        g_marg = b - a          # one (5 mamba + shared attn) group
+        t_marg = c - a          # one tail mamba layer
+        base = a - g_marg
+        n_groups = cfg.n_layers // period
+        tail = cfg.n_layers - n_groups * period
+        total = base + n_groups * g_marg + tail * t_marg
+        detail = {"group_marginal_flops": g_marg.flops,
+                  "mamba_marginal_flops": t_marg.flops,
+                  "n_groups": n_groups, "tail": tail}
+    else:
+        a = _cost_of(_variant(cfg, n_layers=1), shape_name, mesh)
+        b = _cost_of(_variant(cfg, n_layers=2), shape_name, mesh)
+        marg = b - a
+        base = a - marg
+        total = base + cfg.n_layers * marg
+        detail = {"layer_marginal_flops": marg.flops,
+                  "n_layers": cfg.n_layers}
+    return total, detail
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D forward-only (N = active)."""
+    shape = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    tokens = shape.global_batch  # decode: one token per sequence
+    return 2.0 * n * tokens
+
+
+def analyze(arch: str, shape_name: str,
+            cfg: Optional[ModelConfig] = None,
+            tag: str = "baseline") -> Dict:
+    """Full roofline record for one cell (single-pod mesh)."""
+    base_cfg = cfg if cfg is not None else get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(base_cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "skipped",
+                "reason": reason, "tag": tag}
+    mesh = make_production_mesh(multi_pod=False)
+    chips = 256
+    total, detail = composed_cost(arch, shape_name, mesh, cfg=base_cfg)
+    compute_s = total.flops / PEAK_FLOPS
+    memory_s = total.bytes / HBM_BW
+    memory_adj_s = max(total.adj_bytes, 0.0) / HBM_BW
+    coll_s = max(total.coll_bytes, 0.0) / ICI_BW
+    # dominant/fraction use the TPU-faithful adjusted memory term; the raw
+    # term is reported alongside (see runtime/hlo.convert_bytes)
+    dominant = max((("compute", compute_s), ("memory", memory_adj_s),
+                    ("collective", coll_s)), key=lambda kv: kv[1])[0]
+    mf = model_flops(base_cfg, shape_name)
+    hlo_total_flops = total.flops * chips
+    rec = {
+        "arch": arch, "shape": shape_name, "tag": tag, "status": "ok",
+        "chips": chips,
+        "flops_per_device": total.flops,
+        "bytes_per_device": total.bytes,
+        "coll_bytes_per_device": total.coll_bytes,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "memory_adj_s": memory_adj_s,
+        "collective_s": coll_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_adj_s, coll_s),
+        "model_flops": mf,
+        "useful_flops_ratio": mf / max(hlo_total_flops, 1.0),
+        "roofline_fraction": compute_s / max(compute_s, memory_adj_s,
+                                             coll_s),
+        "detail": detail,
+    }
+    return rec
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    rec = analyze(args.arch, args.shape, tag=args.tag)
+    out = os.path.join(RESULTS_DIR,
+                       f"{args.arch}__{args.shape}__{args.tag}.json")
+    with open(out, "w") as f:
+        json.dump(rec, f, indent=1)
+    print(json.dumps(rec, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json
+import time
+import traceback
+
+from repro.configs import SHAPES, list_archs
+from repro.launch import roofline
+
+os.makedirs(roofline.RESULTS_DIR, exist_ok=True)
+
+for arch in list_archs():
+    for shape in SHAPES:
+        tag = __import__("os").environ.get("ROOFLINE_TAG", "baseline")
+        out = os.path.join(roofline.RESULTS_DIR,
+                           f"{arch}__{shape}__{tag}.json")
+        if os.path.exists(out):
+            print(f"[cached ] {arch}/{shape}")
+            continue
+        t0 = time.time()
+        try:
+            rec = roofline.analyze(arch, shape, tag=tag)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape, "tag": tag,
+                   "status": "FAILED", "error": str(e)[-1500:],
+                   "traceback": traceback.format_exc()[-3000:]}
+        with open(out, "w") as f:
+            json.dump(rec, f, indent=1)
+        s = rec["status"]
+        extra = ""
+        if s == "ok":
+            extra = (f"dom={rec['dominant']} "
+                     f"c={rec['compute_s']:.3g}s m={rec['memory_s']:.3g}s "
+                     f"x={rec['collective_s']:.3g}s "
+                     f"frac={rec['roofline_fraction']:.3f}")
+        elif s == "FAILED":
+            extra = rec["error"].splitlines()[-1][:140]
+        print(f"[{s:7s}] {arch}/{shape} ({time.time()-t0:.0f}s) {extra}",
+              flush=True)
+print("roofline baselines done")

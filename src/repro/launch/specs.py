@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation -- the dry-run lowers against
+these. Shapes follow the brief: LM shapes are seq_len x global_batch;
+decode_* / long_* lower `serve_step` (one new token against a seq_len KV
+cache); [audio]/[vlm] get stubbed frontend embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.lm import Model
+from repro.runtime import sharding as shardlib
+
+SDS = jax.ShapeDtypeStruct
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.frontend == "vision_patches":
+        s_text = s - cfg.n_patch_tokens
+        return {
+            "tokens": SDS((b, s_text), jnp.int32),
+            "labels": SDS((b, s_text), jnp.int32),
+            "patch_embeds": SDS((b, cfg.n_patch_tokens, cfg.d_model),
+                                jnp.bfloat16),
+        }
+    if cfg.frontend == "audio_frames":
+        return {
+            "tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32),
+            "frames": SDS((b, cfg.max_source_positions, cfg.d_model),
+                          jnp.bfloat16),
+        }
+    return {"tokens": SDS((b, s), jnp.int32),
+            "labels": SDS((b, s), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "vision_patches":
+        out["tokens"] = SDS((b, s - cfg.n_patch_tokens), jnp.int32)
+        out["patch_embeds"] = SDS((b, cfg.n_patch_tokens, cfg.d_model),
+                                  jnp.bfloat16)
+    elif cfg.frontend == "audio_frames":
+        out["tokens"] = SDS((b, s), jnp.int32)
+        out["frames"] = SDS((b, cfg.max_source_positions, cfg.d_model),
+                            jnp.bfloat16)
+    else:
+        out["tokens"] = SDS((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(model: Model, cfg: ModelConfig,
+                 shape: ShapeConfig) -> Tuple[Any, Any]:
+    """(cache SDS pytree, tokens SDS) for one serve_step."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(b, s))
+    return cache, SDS((b,), jnp.int32)
+
+
+def batch_shardings(mesh: Mesh, batch: Dict[str, Any]) -> Dict[str, Any]:
+    bspec = shardlib.batch_spec(mesh)
+
+    def one(k, v):
+        da = bspec[0]
+        if v.shape[0] % shardlib._axis_size(mesh, da) == 0:
+            return NamedSharding(mesh, P(da, *([None] * (len(v.shape) - 1))))
+        return NamedSharding(mesh, P())  # e.g. batch=1: replicate
+
+    return {k: one(k, v) for k, v in batch.items()}

@@ -1,0 +1,102 @@
+"""Step functions: train_step (fwd + bwd + AdamW), prefill, serve(decode).
+
+These are the functions the dry-run lowers and the drivers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.lm import Model
+from repro.optim import adamw
+from repro.optim import schedule as sched
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    schedule_fn: Optional[Callable] = None,
+                    schedule_kwargs: Optional[Dict] = None) -> Callable:
+    schedule_fn = schedule_fn or sched.constant
+    schedule_kwargs = schedule_kwargs or {}
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            return model.loss(p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        lr_scale = schedule_fn(opt_state.step, **schedule_kwargs)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state,
+                                               params, lr_scale)
+        metrics = dict(metrics)
+        metrics.update(om)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_train_step_accum(model: Model, opt_cfg: adamw.AdamWConfig,
+                          accum_steps: int,
+                          schedule_fn: Optional[Callable] = None,
+                          schedule_kwargs: Optional[Dict] = None) -> Callable:
+    """Gradient-accumulated train step: the global batch is split into
+    `accum_steps` microbatches scanned sequentially; activation memory drops
+    ~accum_steps x (the remedy for train cells whose per-device working set
+    exceeds HBM -- EXPERIMENTS.md section Dry-run), and on TPU the per-bucket
+    gradient reduction overlaps the next microbatch's compute. Also the
+    elastic-scaling knob: `runtime.elastic.accum_steps_for` keeps the global
+    batch constant across mesh reshapes."""
+    schedule_fn = schedule_fn or sched.constant
+    schedule_kwargs = schedule_kwargs or {}
+
+    def train_step(params, opt_state, batch):
+        def to_micro(x):
+            b = x.shape[0]
+            assert b % accum_steps == 0, (b, accum_steps)
+            return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+        micro = {k: to_micro(v) for k, v in batch.items()}
+
+        def body(carry, mb):
+            g_acc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: model.loss(p, mb), has_aux=True)(params)
+            g_acc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / accum_steps,
+                g_acc, grads)
+            return (g_acc, loss_acc + loss / accum_steps), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        (grads, loss), _ = jax.lax.scan(body, (zeros, jnp.float32(0)), micro)
+        lr_scale = schedule_fn(opt_state.step, **schedule_kwargs)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state,
+                                               params, lr_scale)
+        om["loss"] = loss
+        return new_params, new_opt, om
+
+    return train_step
+
+
+def make_prefill_step(model: Model, max_len: int) -> Callable:
+    def prefill_step(params, batch):
+        full = dict(batch)
+        full["max_len"] = max_len
+        return model.prefill(params, full)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """One-token decode: (params, cache, tokens (B,), pos) ->
+    (next_tokens, logits, new_cache)."""
+
+    def serve_step(params, cache, tokens, pos):
+        logits, new_cache = model.decode_step(params, cache, tokens, pos)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, logits, new_cache
+
+    return serve_step

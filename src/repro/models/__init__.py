@@ -1,0 +1,7 @@
+"""Model zoo: pure-functional JAX models for all assigned architectures."""
+from . import (attention, blocks, common, lm, mamba2, mla, mlp, moe, rwkv6,
+               whisper)
+from .lm import Model, build
+
+__all__ = ["attention", "blocks", "common", "lm", "mamba2", "mla", "mlp",
+           "moe", "rwkv6", "whisper", "Model", "build"]

@@ -1,0 +1,227 @@
+"""Mamba2 (SSD) mixer -- the zamba2 backbone layer.
+
+Chunked State-Space-Duality form (Dao & Gu 2024): within a chunk the
+recurrence is computed as a masked attention-like quadratic (MXU-friendly);
+across chunks a lax.scan carries the (H, P, N) state. Decode is the O(1)
+recurrent step. Scalar-per-head decay A, depthwise causal conv on (x, B, C),
+gated output -- the Mamba2 block structure with n_groups shared B/C.
+
+This is a TPU-native layout: chunk_size x chunk_size intra-chunk matmuls map
+to the MXU, the inter-chunk scan is length S/chunk (not S).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from . import common
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    return s, d_in, n_heads
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> Dict:
+    s, d_in, nh = _dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 6)
+    return {
+        # in_proj -> [z (gate), x, B, C, dt]
+        "w_in": common.dense_init(
+            ks[0], (cfg.d_model,
+                    2 * d_in + 2 * s.n_groups * s.d_state + nh), dtype=dtype),
+        "conv_w": common.dense_init(ks[1], (s.conv_width, conv_dim),
+                                    scale=0.5, dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.asarray(
+            jnp.log(jnp.linspace(1.0, 16.0, nh)), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": common.rmsnorm_params(d_in, dtype),
+        "w_out": common.dense_init(ks[2], (d_in, cfg.d_model), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, d_in, nh = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in:d_in + d_in + 2 * gn]
+    dt = proj[..., d_in + d_in + 2 * gn:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along S. xbc: (B,S,C); w: (W,C).
+
+    state (B, W-1, C) carries the last inputs for decode. Returns
+    (out, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (width - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)                 # (B, S+W-1, C)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i].astype(xbc.dtype)
+              for i in range(width))
+    out = out + b.astype(xbc.dtype)
+    new_state = xp[:, -(width - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def _ssd_chunked(xh, dt, A, B, C, chunk: int):
+    """SSD scan. xh: (b,S,H,P); dt: (b,S,H); A: (H,) (negative);
+    B, C: (b,S,G,N). Returns (y (b,S,H,P), final_state (b,H,P,N)).
+    """
+    b, S, H, P = xh.shape
+    G, N = B.shape[2], B.shape[3]
+    assert S % chunk == 0
+    nc = S // chunk
+    rep = H // G
+
+    xs = xh.reshape(b, nc, chunk, H, P)
+    dts = dt.reshape(b, nc, chunk, H)
+    Bs = B.reshape(b, nc, chunk, G, N)
+    Cs = C.reshape(b, nc, chunk, G, N)
+
+    dA = dts * A[None, None, None, :]                        # (b,nc,l,H) <= 0
+    cum = jnp.cumsum(dA, axis=2)                             # within-chunk
+    # intra-chunk (attention-like) term: M[i,j] = exp(cum_i - cum_j) i>=j
+    li = jnp.arange(chunk)
+    causal = li[:, None] >= li[None, :]
+    # decay(i,j) = exp(cum[i] - cum[j]) for i >= j
+    dec = jnp.exp(jnp.clip(cum[:, :, :, None, :] - cum[:, :, None, :, :],
+                           -60.0, 0.0))                      # (b,nc,i,j,H)
+    dec = jnp.where(causal[None, None, :, :, None], dec, 0.0)
+    CB = jnp.einsum("bnigN,bnjgN->bnijg", Cs, Bs)            # (b,nc,i,j,G)
+    CB = jnp.repeat(CB, rep, axis=4) if rep > 1 else CB      # -> H
+    scores = CB * dec * dts[:, :, None, :, :]                # dt_j factor
+    y_intra = jnp.einsum("bnijh,bnjhp->bnihp", scores, xs)
+
+    # chunk state: sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    last = cum[:, :, -1:, :]                                 # (b,nc,1,H)
+    decay_to_end = jnp.exp(jnp.clip(last - cum, -60.0, 0.0)) # (b,nc,l,H)
+    Bh = jnp.repeat(Bs, rep, axis=3) if rep > 1 else Bs      # (b,nc,l,H,N)
+    state_c = jnp.einsum("bnlh,bnlhN,bnlhp->bnhpN",
+                         decay_to_end * dts, Bh, xs)         # per-chunk
+
+    # inter-chunk scan
+    chunk_decay = jnp.exp(jnp.clip(last[:, :, 0, :], -60.0, 0.0))  # (b,nc,H)
+
+    def scan_fn(h_prev, inp):
+        st, cd = inp                                         # (b,H,P,N),(b,H)
+        h_new = h_prev * cd[:, :, None, None] + st
+        # emit the state ENTERING the chunk (pre-decay): y_inter applies the
+        # within-chunk inclusive decay exp(cum_i) itself
+        return h_new, h_prev
+
+    h0 = jnp.zeros((b, H, P, N), xh.dtype)
+    h_final, h_ins = jax.lax.scan(
+        scan_fn, h0,
+        (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_ins = h_ins.transpose(1, 0, 2, 3, 4)                   # (b,nc,H,P,N)
+
+    # inter-chunk contribution: y_j += C_j exp(cum_j) h_in
+    Ch = jnp.repeat(Cs, rep, axis=3) if rep > 1 else Cs      # (b,nc,l,H,N)
+    in_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))            # (b,nc,l,H)
+    y_inter = jnp.einsum("bnlhN,bnhpN,bnlh->bnlhp", Ch, h_ins, in_decay)
+
+    y = (y_intra + y_inter).reshape(b, S, H, P)
+    return y, h_final
+
+
+def forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+            approx=None, return_state: bool = False):
+    """Full-sequence Mamba2 mixer. x: (B, S, d_model).
+
+    With return_state=True also returns the decode cache ({conv, ssm}) after
+    consuming the sequence -- the prefill -> decode state handoff."""
+    s, d_in, nh = _dims(cfg)
+    bsz, S, _ = x.shape
+    proj = jnp.einsum("bsd,dk->bsk", x, p["w_in"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc_raw = xbc  # pre-conv inputs: the conv decode state is their tail
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_in]
+    gn = s.n_groups * s.d_state
+    B = xbc[..., d_in:d_in + gn].reshape(bsz, S, s.n_groups, s.d_state)
+    C = xbc[..., d_in + gn:].reshape(bsz, S, s.n_groups, s.d_state)
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32) +
+                           p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))             # (H,) negative
+    xh = xs.reshape(bsz, S, nh, s.head_dim)
+    # pad S to a whole number of SSD chunks (dt=0 on padding => identity)
+    chunk = min(s.chunk_size, S)
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_f = jnp.pad(dt_f, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    y, h_final = _ssd_chunked(xh.astype(jnp.float32), dt_f, A,
+                              B.astype(jnp.float32), C.astype(jnp.float32),
+                              chunk)
+    if pad:
+        y = y[:, :S]
+        xh = xh[:, :S]
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, S, d_in).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(x.dtype))
+    if not return_state:
+        return out
+    w = s.conv_width
+    if S >= w - 1:
+        conv_state = xbc_raw[:, S - (w - 1):S, :]
+    else:
+        conv_state = jnp.concatenate(
+            [jnp.zeros((bsz, w - 1 - S) + xbc_raw.shape[2:], xbc_raw.dtype),
+             xbc_raw], axis=1)
+    return out, {"conv": conv_state, "ssm": h_final}
+
+
+def init_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    s, d_in, nh = _dims(cfg)
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_dim), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def decode_step(p: Dict, cfg: ModelConfig, x: jnp.ndarray, cache: Dict,
+                approx=None) -> Tuple[jnp.ndarray, Dict]:
+    """O(1) recurrent step. x: (B, 1, d_model)."""
+    s, d_in, nh = _dims(cfg)
+    bsz = x.shape[0]
+    proj = jnp.einsum("bsd,dk->bsk", x, p["w_in"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(xbc, p["conv_w"], p["conv_b"],
+                                   state=cache["conv"])
+    xs = xbc[..., :d_in]
+    gn = s.n_groups * s.d_state
+    B = xbc[..., d_in:d_in + gn].reshape(bsz, s.n_groups, s.d_state)
+    C = xbc[..., d_in + gn:].reshape(bsz, s.n_groups, s.d_state)
+    rep = nh // s.n_groups
+    Bh = jnp.repeat(B, rep, axis=1) if rep > 1 else B        # (b,H,N)
+    Ch = jnp.repeat(C, rep, axis=1) if rep > 1 else C
+    dt_f = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                           p["dt_bias"].astype(jnp.float32))  # (b,H)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt_f * A[None, :])                        # (b,H)
+    xh = xs[:, 0].reshape(bsz, nh, s.head_dim).astype(jnp.float32)
+    h = cache["ssm"] * decay[:, :, None, None] + \
+        jnp.einsum("bh,bhN,bhp->bhpN", dt_f, Bh.astype(jnp.float32), xh)
+    y = jnp.einsum("bhN,bhpN->bhp", Ch.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_in).astype(x.dtype)
+    y = common.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["w_out"].astype(x.dtype))
+    return out, {"conv": conv_state.astype(cache["conv"].dtype), "ssm": h}

@@ -1,0 +1,74 @@
+"""Dense FFN (gated-SiLU / GELU) with the paper's iACT / TAF / perforation
+hooks exposed through an ApproxSpec.
+
+Herded FFN perforation drops hidden-dim blocks *structurally* (strided
+slicing of W1/W3 columns and W2 rows) -- the jnp twin of
+kernels/perforated_matmul.py, saving real FLOPs on every backend.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.perforation import kept_indices
+from repro.core.types import ApproxSpec, Technique
+from . import common
+
+
+def init_params(key, d_model: int, d_ff: int, kind: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    if kind == "gated_silu":
+        return {
+            "w_gate": common.dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+            "w_up": common.dense_init(ks[1], (d_model, d_ff), dtype=dtype),
+            "w_down": common.dense_init(ks[2], (d_ff, d_model), dtype=dtype),
+        }
+    return {
+        "w_up": common.dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_down": common.dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+
+
+def _keep_idx(d_ff: int, spec: Optional[ApproxSpec], block: int = 128):
+    if spec is None or spec.technique != Technique.PERFORATION:
+        return None
+    nb = max(d_ff // block, 1)
+    kept = kept_indices(nb, spec.perforation)
+    if len(kept) == nb:
+        return None
+    idx = jnp.concatenate([jnp.arange(b * block, min((b + 1) * block, d_ff))
+                           for b in kept])
+    return idx
+
+
+def forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray, kind: str,
+            approx: Optional[ApproxSpec] = None) -> jnp.ndarray:
+    """x: (B, S, d). Perforation (herded) shrinks the hidden dim blocks."""
+    idx = _keep_idx(p["w_down"].shape[0], approx)
+    dt = x.dtype
+    if kind == "gated_silu":
+        wg, wu, wd = p["w_gate"], p["w_up"], p["w_down"]
+        if idx is not None:
+            wg = jnp.take(wg, idx, axis=1)
+            wu = jnp.take(wu, idx, axis=1)
+            wd = jnp.take(wd, idx, axis=0)
+        # ZeRO-3 use-site re-gather: storage may be sharded over the data
+        # axes; compute wants TP-only layout (weight all-gather bytes <<
+        # activation all-reduce bytes at long sequence -- section Perf cell B)
+        wg = common.shard_hint(wg, None, "model")
+        wu = common.shard_hint(wu, None, "model")
+        wd = common.shard_hint(wd, "model", None)
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, wg.astype(dt))) * \
+            jnp.einsum("bsd,df->bsf", x, wu.astype(dt))
+        return jnp.einsum("bsf,fd->bsd", h, wd.astype(dt))
+    wu, wd = p["w_up"], p["w_down"]
+    if idx is not None:
+        wu = jnp.take(wu, idx, axis=1)
+        wd = jnp.take(wd, idx, axis=0)
+    wu = common.shard_hint(wu, None, "model")
+    wd = common.shard_hint(wd, "model", None)
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, wu.astype(dt)))
+    return jnp.einsum("bsf,fd->bsd", h, wd.astype(dt))

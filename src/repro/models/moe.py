@@ -1,0 +1,145 @@
+"""Mixture-of-Experts layer: GShard-style top-k routing with capacity and
+grouped dispatch einsums (SPMD-friendly: the expert dimension shards over
+the `model` mesh axis => XLA inserts the all-to-all pattern), plus optional
+shared (always-on) experts -- the DeepSeek-V3 / OLMoE shapes.
+
+Beyond-paper AC composition: *expert perforation* -- herded dropping of every
+M-th routed expert (the paper's loop-perforation insight applied to the
+expert loop). Because the drop set is herded (static and shared), the
+dropped experts' weights are never touched: structural savings.
+
+The dispatch is grouped (`router_group_size` tokens per group) so the
+one-hot dispatch tensor stays (G, S_g, E, C) with S_g small -- the VMEM/HBM
+capacity argument of paper Figure 3 applied to routing state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.core.perforation import kept_indices
+from repro.core.types import ApproxSpec, Technique
+from . import common, mlp
+
+
+def init_params(key, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": common.dense_init(ks[0], (d, m.n_experts), dtype=jnp.float32),
+        # experts stacked on a leading E axis (shards over `model`)
+        "w_gate": common.dense_init(ks[1], (m.n_experts, d, m.d_ff_expert),
+                                    scale=1.0 / (d ** 0.5), dtype=dtype),
+        "w_up": common.dense_init(ks[2], (m.n_experts, d, m.d_ff_expert),
+                                  scale=1.0 / (d ** 0.5), dtype=dtype),
+        "w_down": common.dense_init(ks[3], (m.n_experts, m.d_ff_expert, d),
+                                    scale=1.0 / (m.d_ff_expert ** 0.5),
+                                    dtype=dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp.init_params(
+            ks[4], d, m.d_ff_expert * m.n_shared_experts, "gated_silu", dtype)
+    return p
+
+
+def _capacity(m: MoEConfig, group: int) -> int:
+    c = int(group * m.experts_per_token * m.capacity_factor / m.n_experts)
+    return max(c, m.experts_per_token)
+
+
+def forward(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+            approx: Optional[ApproxSpec] = None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, d) -> (out, aux_loss). Dropped-token policy: capacity
+    overflow falls through to the shared expert / residual (standard GShard).
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    dt = x.dtype
+    n_e = m.n_experts
+
+    # --- expert perforation (beyond-paper AC; herded over the expert list)
+    kept_experts = None
+    if approx is not None and approx.technique == Technique.PERFORATION:
+        kept = kept_indices(n_e, approx.perforation)
+        if len(kept) < n_e:
+            kept_experts = jnp.asarray(kept, jnp.int32)
+
+    group = min(m.router_group_size, b * s)
+    n_tokens = b * s
+    assert n_tokens % group == 0, (n_tokens, group)
+    g = n_tokens // group
+    xg = x.reshape(g, group, d)
+
+    router_w = common.shard_hint(p["router"].astype(jnp.float32),
+                                 None, None)  # tiny: replicate at use
+    if kept_experts is not None:
+        router_w = jnp.take(router_w, kept_experts, axis=1)
+        w_gate = jnp.take(p["w_gate"], kept_experts, axis=0)
+        w_up = jnp.take(p["w_up"], kept_experts, axis=0)
+        w_down = jnp.take(p["w_down"], kept_experts, axis=0)
+        n_e = len(kept)
+    else:
+        w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    # ZeRO-3 use-site re-gather (section Perf cell B): expert weights compute in
+    # EP-only layout; FSDP keeps storage sharded over the data axes
+    w_gate = common.shard_hint(w_gate, "model", None, None)
+    w_up = common.shard_hint(w_up, "model", None, None)
+    w_down = common.shard_hint(w_down, "model", None, None)
+
+    logits = jnp.einsum("gtd,de->gte", xg.astype(jnp.float32), router_w)
+    # router stays token-local (section Perf cell B4): no E-sharded probs =>
+    # no all-gather around top_k
+    logits = common.shard_hint(logits, common.data_axes_hint(), None, None)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (g, t, E)
+    k = min(m.experts_per_token, n_e)
+    top_w, top_i = jax.lax.top_k(probs, k)                   # (g, t, k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # aux load-balance loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    onehot_top = jax.nn.one_hot(top_i, n_e, dtype=jnp.float32)  # (g,t,k,E)
+    ce = jnp.mean(jnp.sum(onehot_top, axis=2), axis=(0, 1))  # (E,)
+    aux = n_e * jnp.sum(me * ce) * m.aux_loss_coef
+
+    # --- capacity assignment: position of each (token, slot) in its expert
+    cap = _capacity(m, group)
+    flat_assign = onehot_top                                  # (g,t,k,E)
+    # rank within expert: cumsum over (t, k) flattened
+    a2 = flat_assign.reshape(g, group * k, n_e)
+    ranks = jnp.cumsum(a2, axis=1) - a2                       # (g, t*k, E)
+    pos = jnp.sum(ranks * a2, axis=-1).reshape(g, group, k)   # (g, t, k)
+    keep = pos < cap
+    w_kept = top_w * keep.astype(jnp.float32)
+
+    # dispatch tensor (g, t, E, C)
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap).astype(jnp.int32),
+                            cap + 1, dtype=jnp.float32)[..., :cap]
+    disp = jnp.einsum("gtke,gtkc->gtec", onehot_top,
+                      pos_oh * keep[..., None].astype(jnp.float32))
+    comb = jnp.einsum("gtke,gtkc,gtk->gtec", onehot_top, pos_oh, w_kept)
+
+    # expert compute: (g, E, C, d) -> ffn -> back. Layout pins (section Perf
+    # cell B2): token groups over the data axes, experts over model; the
+    # g<->E reshard is the all-to-all, everything else stays local.
+    da = common.data_axes_hint()
+    xg = common.shard_hint(xg, da, None, None)
+    disp = common.shard_hint(disp, da, None, "model", None)
+    xe = jnp.einsum("gtec,gtd->gecd", disp.astype(dt), xg)
+    xe = common.shard_hint(xe, da, "model", None, None)
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate.astype(dt))) * \
+        jnp.einsum("gecd,edf->gecf", xe, w_up.astype(dt))
+    h = common.shard_hint(h, da, "model", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, w_down.astype(dt))
+    ye = common.shard_hint(ye, da, "model", None, None)
+    out = jnp.einsum("gtec,gecd->gtd", comb.astype(dt), ye)
+    out = common.shard_hint(out, da, None, None)
+
+    out = out.reshape(b, s, d)
+    if m.n_shared_experts:
+        out = out + mlp.forward(p["shared"], cfg, x, "gated_silu")
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,4 @@
+from . import adamw, compress, schedule
+from .adamw import AdamWConfig, AdamWState
+
+__all__ = ["adamw", "compress", "schedule", "AdamWConfig", "AdamWState"]

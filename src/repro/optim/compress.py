@@ -1,0 +1,63 @@
+"""int8 gradient compression with error feedback (EF-SGD style).
+
+Distributed-optimization substrate: gradients are per-tensor-scaled,
+quantized to int8 before the data-parallel all-reduce (4x wire reduction on
+fp32, 2x on bf16), and the quantization residual is carried in an error-
+feedback buffer so the bias vanishes over steps (property-tested: EF makes
+quantized-SGD exact in accumulation).
+
+Usage inside the train step (under shard_map or via psum of dequantized
+values): q, scale = quantize(g + ef); g_hat = dequantize(q, scale);
+new_ef = (g + ef) - g_hat.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class EFState(NamedTuple):
+    residual: PyTree  # same structure/shapes as grads, float32
+
+
+def init_ef(grads_like: PyTree) -> EFState:
+    return EFState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads_like))
+
+
+def quantize_tensor(g: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_tensor(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads: PyTree, ef: EFState
+                   ) -> Tuple[PyTree, PyTree, EFState]:
+    """Returns (quantized pytree of (q, scale), dequantized grads, new EF)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, scale = quantize_tensor(corrected)
+        g_hat = dequantize_tensor(q, scale)
+        return (q, scale), g_hat, corrected - g_hat
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(ef.residual)
+    qs, g_hats, residuals = [], [], []
+    for g, r in zip(flat_g, flat_r):
+        q, g_hat, res = one(g, r)
+        qs.append(q)
+        g_hats.append(g_hat)
+        residuals.append(res)
+    return (jax.tree.unflatten(treedef, qs),
+            jax.tree.unflatten(treedef, g_hats),
+            EFState(jax.tree.unflatten(treedef, residuals)))

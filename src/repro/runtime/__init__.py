@@ -1,0 +1,3 @@
+from . import elastic, hlo, pipeline, sharding, straggler
+
+__all__ = ["elastic", "hlo", "pipeline", "sharding", "straggler"]

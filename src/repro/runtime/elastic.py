@@ -1,0 +1,52 @@
+"""Elastic scaling: choose a mesh for the devices that are actually alive,
+and reshard state onto it.
+
+Recovery flow after losing hosts (or gaining them back):
+  1. `best_mesh_shape(n)` picks the largest supported (data, model) grid
+     that fits n devices (model axis preserved when possible -- TP degree is
+     a property of the weight layout; the data axis absorbs elasticity).
+  2. rebuild shardings for the new mesh (runtime.sharding).
+  3. CheckpointManager.restore(..., shardings=new) reshards on load.
+The global batch is kept constant by rescaling gradient-accumulation steps
+(`accum_steps_for`), so training dynamics are unchanged across reshapes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int = 16,
+                    min_model: int = 1) -> Tuple[int, int]:
+    """Largest (data, model) grid with data*model <= n_devices, preferring to
+    keep the requested TP degree; degrade TP only when unavoidable."""
+    mp = min(model_parallel, n_devices)
+    while mp > min_model and n_devices % mp:
+        mp //= 2
+    data = n_devices // mp
+    return data, mp
+
+
+def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 16,
+                  axis_names: Sequence[str] = ("data", "model")):
+    devs = jax.devices()
+    n = n_devices if n_devices is not None else len(devs)
+    data, mp = best_mesh_shape(n, model_parallel)
+    return jax.make_mesh(
+        (data, mp), tuple(axis_names),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2,
+        devices=devs[: data * mp])
+
+
+def accum_steps_for(global_batch: int, per_device_batch: int,
+                    n_data_shards: int) -> int:
+    """Keep the global batch constant across elastic reshapes by adjusting
+    gradient accumulation."""
+    per_step = per_device_batch * n_data_shards
+    accum = max(1, global_batch // per_step)
+    if accum * per_step != global_batch:
+        raise ValueError(
+            f"global_batch {global_batch} not reachable with "
+            f"{n_data_shards} shards x {per_device_batch}/device")
+    return accum

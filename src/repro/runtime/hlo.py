@@ -1,0 +1,148 @@
+"""Compiled-HLO analysis: collective byte accounting for the roofline.
+
+`cost_analysis()` has FLOPs and memory bytes but no collective traffic; we
+parse the post-SPMD compiled HLO text and sum operand bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `%name = TYPE[dims]{layout} op-name(...)` (possibly tuple-typed)
+_OP_RE = re.compile(
+    r"=\s*(?P<type>\(?[a-z0-9](?:[^=\n])*?)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: Dict[str, int]
+    bytes_by_kind: Dict[str, int]
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    def summary(self) -> str:
+        parts = [f"{k}: n={self.counts.get(k, 0)} "
+                 f"bytes={self.bytes_by_kind.get(k, 0):,}"
+                 for k in _COLLECTIVES if self.counts.get(k, 0)]
+        return "; ".join(parts) if parts else "none"
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Sum RESULT-shape bytes of every collective op (per-device view:
+    SPMD-partitioned HLO shapes are already per-device). `-done` ops are
+    skipped so async start/done pairs are not double-counted."""
+    counts: Dict[str, int] = {}
+    byts: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        b = _shape_bytes(m.group("type"))
+        counts[op] = counts.get(op, 0) + 1
+        byts[op] = byts.get(op, 0) + b
+    return CollectiveStats(counts, byts)
+
+
+_CONVERT_RE = re.compile(
+    r"=\s+(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\][^ ]*\s+convert\(")
+_FREE_OPS_RE = re.compile(
+    r"=\s+(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\][^ ]*\s+"
+    r"(?P<op>bitcast|copy)\(")
+
+
+def entry_text(hlo_text: str) -> str:
+    """The ENTRY computation's lines only (top-level ops; fusion bodies are
+    separate computations whose interior ops never touch HBM)."""
+    lines = hlo_text.splitlines()
+    out = []
+    depth = None
+    for ln in lines:
+        if depth is None:
+            if ln.startswith("ENTRY"):
+                depth = 1
+            continue
+        depth += ln.count("{") - ln.count("}")
+        out.append(ln)
+        if depth <= 0:
+            break
+    return "\n".join(out)
+
+
+def convert_bytes(hlo_text: str) -> int:
+    """Total (operand + output) bytes of TOP-LEVEL dtype-convert ops.
+
+    The CPU backend materializes bf16<->f32 converts around every dot; a TPU
+    MXU consumes bf16 natively and fuses converts into surrounding ops. The
+    roofline's TPU-faithful memory term subtracts this traffic (reported as
+    `memory_adj_s` next to the raw `memory_s`).
+    """
+    hlo_text = entry_text(hlo_text)
+    total = 0
+    for m in _CONVERT_RE.finditer(hlo_text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        out_b = n * _DTYPE_BYTES[dt]
+        # operand dtype unknown from this line; bf16<->f32 dominates:
+        in_b = out_b // 2 if dt in ("f32", "s32") else out_b * 2
+        total += out_b + in_b
+    for m in _FREE_OPS_RE.finditer(hlo_text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        dims = m.group("dims")
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += 2 * n * _DTYPE_BYTES[dt]  # bitcasts/copies are free on TPU
+    return total
+
+
+def while_trip_counts(hlo_text: str) -> List[int]:
+    """Best-effort trip counts of while loops (for scan-aware cost accounting
+    diagnostics)."""
+    out = []
+    for m in re.finditer(r"trip_count[=:]\s*(\d+)", hlo_text):
+        out.append(int(m.group(1)))
+    return out

@@ -1,0 +1,91 @@
+"""GPipe-style pipeline parallelism over a mesh axis via shard_map +
+lax.ppermute.
+
+`pipeline_apply(fn, params_stacked, x, mesh, axis)` treats the `axis` mesh
+dimension as pipeline stages: stage s holds layer-group s of the stacked
+params (sharded on their leading dim) and passes activations to stage s+1
+with collective_permute. Microbatching: the input batch is split into M
+microbatches; the schedule runs S + M - 1 ticks (fill + steady state +
+drain), the classic GPipe bubble fraction (S-1)/(S+M-1).
+
+This substrate is validated in tests/test_distributed.py on 8 host devices
+and is the PP building block for meshes that dedicate the `pod` axis to
+stages. The default production configs use DP over `pod` (better for the
+assigned shapes -- see DESIGN.md section 5); PP is config-selectable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+PyTree = Any
+
+
+def pipeline_apply(layer_fn: Callable, params_stacked: PyTree, x: jnp.ndarray,
+                   mesh: Mesh, axis: str = "stage",
+                   n_microbatches: int = 4) -> jnp.ndarray:
+    """Run x through S pipeline stages, each applying `layer_fn(params_s, .)`.
+
+    layer_fn: (stage_params, activations (mb, ...)) -> activations.
+    params_stacked: leaves with leading dim == S (one slice per stage).
+    x: (batch, ...) with batch % n_microbatches == 0.
+    """
+    n_stages = mesh.shape[axis]
+    b = x.shape[0]
+    assert b % n_microbatches == 0, (b, n_microbatches)
+    mb = b // n_microbatches
+
+    param_specs = jax.tree.map(lambda _: P(axis), params_stacked)
+
+    def stage_program(params_local, x_local):
+        # params_local leaves: (1, ...) -- this stage's slice
+        params_s = jax.tree.map(lambda a: a[0], params_local)
+        stage_id = jax.lax.axis_index(axis)
+        xm = x_local.reshape((n_microbatches, mb) + x_local.shape[1:])
+        n_ticks = n_stages + n_microbatches - 1
+        fwd_perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def tick(carry, t):
+            buf, out = carry                     # buf: (mb,...) in-transit
+            # stage 0 injects microbatch t (if available)
+            inject = jnp.where(t < n_microbatches, t, 0)
+            x_in = jnp.where(stage_id == 0,
+                             xm[inject].astype(buf.dtype), buf)
+            active = jnp.logical_and(stage_id <= t,
+                                     t - stage_id < n_microbatches)
+            y = layer_fn(params_s, x_in)
+            y = jnp.where(active, y, x_in)
+            # last stage collects its finished microbatch
+            done_idx = t - (n_stages - 1)
+            collect = jnp.logical_and(stage_id == n_stages - 1,
+                                      done_idx >= 0)
+            out = jax.lax.cond(
+                collect,
+                lambda o: jax.lax.dynamic_update_slice(
+                    o, y[None].astype(o.dtype),
+                    (jnp.maximum(done_idx, 0),) + (0,) * (o.ndim - 1)),
+                lambda o: o, out)
+            buf_next = jax.lax.ppermute(y, axis, fwd_perm)
+            return (buf_next, out), None
+
+        buf0 = jnp.zeros((mb,) + x_local.shape[1:], x_local.dtype)
+        out0 = jnp.zeros((n_microbatches, mb) + x_local.shape[1:],
+                         x_local.dtype)
+        (buf, out), _ = jax.lax.scan(tick, (buf0, out0),
+                                     jnp.arange(n_ticks))
+        # only the last stage holds real output; zero elsewhere + psum
+        # broadcasts it (replicated out-spec)
+        out = jnp.where(stage_id == n_stages - 1, out,
+                        jnp.zeros_like(out))
+        out = jax.lax.psum(out, axis)
+        return out.reshape((b,) + x_local.shape[1:])
+
+    fn = shard_map(stage_program, mesh=mesh,
+                   in_specs=(param_specs, P()),
+                   out_specs=P(), check_vma=False)
+    return fn(params_stacked, x)

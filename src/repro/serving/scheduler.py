@@ -1,0 +1,146 @@
+"""Continuous-batching serving loop.
+
+Production serving substrate: a slot-based scheduler multiplexes many
+requests over one decode-step function. Requests enter a FIFO queue; free
+slots are (re)filled via per-slot prefill; every engine tick decodes ONE
+token for ALL active slots (the batched serve_step that decode_32k lowers);
+finished sequences (EOS or max_tokens) free their slot immediately --
+no head-of-line blocking on long generations.
+
+Composes with the paper's technique: a TAF `approx_decode` config skips
+stable layers inside the shared decode step, and the engine reports the
+skipped-layer fraction alongside throughput.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.launch import steps as steps_mod
+from repro.models.lm import Model
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (prompt_len,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    # filled by the engine:
+    output: List[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: Optional[float] = None
+    finished_at: Optional[float] = None
+
+
+@dataclasses.dataclass
+class EngineStats:
+    ticks: int = 0
+    tokens_out: int = 0
+    finished: int = 0
+    taf_skipped: int = 0
+    taf_total: int = 0
+
+    @property
+    def taf_skip_fraction(self) -> float:
+        return self.taf_skipped / max(self.taf_total, 1)
+
+
+class ServingEngine:
+    """Slot-based continuous batching over a fixed decode batch size."""
+
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, prompt_len: int = 32):
+        self.model = model
+        self.params = params
+        self.n_slots = slots
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        self.queue: Deque[Request] = collections.deque()
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros(slots, np.int64)       # next write position
+        self.limit = np.zeros(slots, np.int64)     # stop position
+        self.stats = EngineStats()
+        # one shared cache sized (slots, max_len); per-slot prefill writes
+        # into its row via the batched prefill below
+        self._prefill = jax.jit(steps_mod.make_prefill_step(model, max_len))
+        self._serve = jax.jit(steps_mod.make_serve_step(model))
+        self.cache = None
+        self.tokens = jnp.zeros((slots,), jnp.int32)
+
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        """Fill free slots from the queue. Slot admission re-prefills the
+        whole batch row-set for simplicity (single-host engine); a
+        production multi-host engine prefilling per-slot uses the same
+        cache layout with dynamic_update_slice on the batch dim."""
+        free = [i for i, r in enumerate(self.active) if r is None]
+        if not free or not self.queue:
+            return
+        changed = False
+        for i in free:
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.active[i] = req
+            self.pos[i] = self.prompt_len
+            self.limit[i] = min(self.prompt_len + req.max_new_tokens,
+                                self.max_len)
+            changed = True
+        if changed:
+            prompts = np.zeros((self.n_slots, self.prompt_len), np.int32)
+            for i, r in enumerate(self.active):
+                if r is not None:
+                    p = r.prompt[-self.prompt_len:]
+                    prompts[i, -len(p):] = p
+            logits, self.cache = self._prefill(self.params,
+                                               {"tokens": jnp.asarray(prompts)})
+            self.tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def tick(self) -> int:
+        """One engine step: admit, decode one token for all active slots,
+        retire finished requests. Returns number of live slots."""
+        self._admit()
+        live = [i for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return 0
+        pos = int(self.pos[live].min())  # single shared timeline position
+        self.tokens, _, self.cache = self._serve(
+            self.params, self.cache, self.tokens, jnp.int32(pos))
+        toks = np.asarray(self.tokens)
+        if self.cache is not None and "taf" in self.cache:
+            rem = np.asarray(self.cache["taf"]["remaining"])
+            self.stats.taf_skipped += int((rem > 0).sum())
+            self.stats.taf_total += rem.size
+        now = time.time()
+        for i in live:
+            req = self.active[i]
+            if req.first_token_at is None:
+                req.first_token_at = now
+            req.output.append(int(toks[i]))
+            self.pos[i] += 1
+            self.stats.tokens_out += 1
+            done = (self.pos[i] >= self.limit[i] or
+                    (req.eos_id is not None and toks[i] == req.eos_id))
+            if done:
+                req.finished_at = now
+                self.active[i] = None
+                self.stats.finished += 1
+        self.stats.ticks += 1
+        return len([r for r in self.active if r is not None])
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> EngineStats:
+        for _ in range(max_ticks):
+            live = self.tick()
+            if live == 0 and not self.queue:
+                break
+        return self.stats

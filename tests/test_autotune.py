@@ -1,0 +1,88 @@
+"""Autotuner tests (core/autotune.py: paper section 4.2 future work)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import ApproxSpec, Level, TAFParams, Technique
+from repro.core.autotune import random_search, successive_halving
+from repro.core.harness import AppResult, ApproxApp
+from repro.core import taf as taf_mod
+
+
+def _make_app():
+    xs = jnp.ones((40, 16, 4)) + 0.001 * jnp.asarray(
+        np.random.RandomState(0).standard_normal((40, 16, 4)))
+
+    def run(spec: ApproxSpec) -> AppResult:
+        import time
+        t0 = time.perf_counter()
+        if spec.technique == Technique.TAF:
+            ys, _, frac = taf_mod.run_sequence(spec.taf, xs,
+                                               lambda x: jnp.sum(x, -1))
+            frac = float(frac)
+        else:
+            ys = jnp.sum(xs, -1)
+            frac = 0.0
+        return AppResult(qoi=np.asarray(ys),
+                         wall_time_s=time.perf_counter() - t0,
+                         approx_fraction=frac,
+                         flop_fraction=max(1 - frac, 1e-3))
+
+    return ApproxApp("tune_demo", run)
+
+
+def _grid():
+    specs = []
+    for t in (0.0, 0.1, 1.0, 10.0):
+        for p in (2, 16):
+            specs.append(ApproxSpec(Technique.TAF, Level.ELEMENT,
+                                    taf=TAFParams(3, p, t)))
+    return specs
+
+
+def test_successive_halving_finds_high_speedup_config():
+    app = _make_app()
+    recs = successive_halving(app, _grid(), max_error=0.10, eta=2)
+    assert recs, "must return final-rung records"
+    best = recs[0]
+    # stable data: the tuner must find a config that approximates a lot
+    assert best.error < 0.10
+    assert best.modeled_speedup > 2.0
+    # t=0 configs cannot win (they never approximate)
+    assert best.spec["thresh"] > 0.0
+
+
+def test_successive_halving_cheaper_than_exhaustive():
+    app = _make_app()
+    calls = {"n": 0}
+    orig = app.run
+
+    def counting(spec):
+        calls["n"] += 1
+        return orig(spec)
+
+    app.run = counting
+    successive_halving(app, _grid(), max_error=0.10, eta=2, base_repeats=1)
+    # the race reached fidelity 4 (two halvings): exhaustive at that
+    # fidelity costs 4 * n; the race must undercut it
+    assert calls["n"] < 4 * len(_grid())
+
+
+def test_random_search_respects_budget():
+    app = _make_app()
+    calls = {"n": 0}
+    orig = app.run
+
+    def counting(spec):
+        calls["n"] += 1
+        return orig(spec)
+
+    app.run = counting
+
+    def sampler(rng):
+        return ApproxSpec(Technique.TAF, Level.ELEMENT,
+                          taf=TAFParams(3, rng.choice([2, 16]),
+                                        rng.choice([0.1, 1.0, 10.0])))
+
+    recs = random_search(app, sampler, budget=6)
+    assert len(recs) == 6
+    assert calls["n"] == 6 + 1  # budget + exact baseline

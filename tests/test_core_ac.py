@@ -1,0 +1,198 @@
+"""Unit tests for the core AC programming model (paper semantics)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (ApproxRegion, ApproxSpec, IACTParams, Level,
+                        PerforationKind, PerforationParams, TAFParams,
+                        Technique, parse_pragma, perforated_loop)
+from repro.core import hierarchy, iact, perforation, taf
+from repro.core.rsd import rsd
+
+
+class TestPragmaParsing:
+    def test_memo_in(self):
+        s = parse_pragma("memo(in:2:0.5:4) level(warp)")
+        assert s.technique == Technique.IACT
+        assert s.level == Level.TILE
+        assert s.iact == IACTParams(2, 0.5, 4)
+
+    def test_memo_out(self):
+        s = parse_pragma("memo(out:3:5:1.5) level(thread)")
+        assert s.technique == Technique.TAF
+        assert s.taf == TAFParams(3, 5, 1.5)
+
+    def test_perfo(self):
+        s = parse_pragma("perfo(small:4)")
+        assert s.perforation.kind == PerforationKind.SMALL
+        assert s.perforation.skip == 4
+        s = parse_pragma("perfo(ini:0.3) level(team)")
+        assert s.perforation.kind == PerforationKind.INI
+        assert s.level == Level.BLOCK
+
+    def test_bad_pragma(self):
+        with pytest.raises(ValueError):
+            parse_pragma("approximate(everything)")
+
+
+class TestTAF:
+    def test_state_machine_cycle(self):
+        """Window fill (h) -> stable -> p approximations -> accurate again."""
+        params = TAFParams(history_size=3, prediction_size=4,
+                           rsd_threshold=0.5)
+        state = taf.init(params, 1)
+        outs = []
+        masks = []
+        for t in range(12):
+            out, state, mask = taf.step(
+                state, lambda: jnp.asarray([1.0]), params)
+            outs.append(float(out[0]))
+            masks.append(bool(mask[0]))
+        # steps 0-2 accurate (fill window), step 2 triggers stable,
+        # steps 3-6 approximate, step 7 accurate, 8-11 approximate
+        assert masks[:3] == [False, False, False]
+        assert masks[3:7] == [True] * 4
+        assert masks[7] is False
+        assert masks[8:12] == [True] * 4
+        assert all(o == 1.0 for o in outs)
+
+    def test_noisy_never_stabilizes(self):
+        params = TAFParams(3, 4, 0.01)
+        rng = np.random.RandomState(0)
+        xs = jnp.asarray(rng.standard_normal((30, 8, 4)) * 100)
+        _, _, frac = taf.run_sequence(params, xs,
+                                      lambda x: jnp.sum(x, -1))
+        assert float(frac) < 0.05
+
+    def test_memo_returns_last_accurate(self):
+        params = TAFParams(2, 2, 10.0)  # huge threshold: stable asap
+        state = taf.init(params, 1)
+        out0, state, _ = taf.step(state, lambda: jnp.asarray([5.0]), params)
+        out1, state, _ = taf.step(state, lambda: jnp.asarray([7.0]), params)
+        # now stable; next 2 approximate with the LAST accurate value (7)
+        out2, state, m2 = taf.step(state, lambda: jnp.asarray([9.0]), params)
+        assert bool(m2[0]) and float(out2[0]) == 7.0
+
+    def test_block_level_skips_whole_batch(self):
+        params = TAFParams(2, 4, 10.0)
+        state = taf.init(params, 8)
+        calls = []
+
+        def accurate():
+            calls.append(1)
+            return jnp.ones((8,))
+
+        for _ in range(4):
+            out, state, mask = taf.step(state, accurate, params, Level.BLOCK)
+        # traced twice at most (cond branches), but mask shows block skips
+        assert bool(mask.all())
+
+
+class TestIACT:
+    def test_exact_reuse(self):
+        params = IACTParams(table_size=4, threshold=0.5, tables_per_block=0)
+        xs = jnp.tile(jnp.arange(6.0)[None, :, None], (10, 1, 3))
+        ys, state, frac = iact.run_sequence(params, xs,
+                                            lambda x: jnp.sum(x, -1))
+        assert float(frac) > 0.8
+        np.testing.assert_allclose(np.asarray(ys),
+                                   np.asarray(jnp.sum(xs, -1)), atol=1e-5)
+
+    def test_threshold_zero_never_hits_noise(self):
+        params = IACTParams(4, 1e-9, 0)
+        rng = np.random.RandomState(0)
+        xs = jnp.asarray(rng.standard_normal((10, 8, 3)))
+        _, _, frac = iact.run_sequence(params, xs, lambda x: jnp.sum(x, -1))
+        assert float(frac) == 0.0
+
+    def test_round_robin_replacement(self):
+        """Table of 2: inserting 3 distinct values evicts the oldest."""
+        params = IACTParams(table_size=2, threshold=0.1, tables_per_block=1)
+        state = iact.init(params, 1, 2)
+        f = lambda x: jnp.sum(x, -1)
+        for v in (0.0, 10.0, 20.0):
+            x = jnp.full((1, 2), v)
+            _, state, _ = iact.step(state, x, f, params)
+        keys = np.asarray(state.keys)[0]
+        assert 0.0 not in keys[:, 0] or np.allclose(keys[0, 0], 20.0)
+        # the oldest (0.0) was evicted by 20.0 at cursor 0
+        assert sorted(keys[:, 0].tolist()) == [10.0, 20.0]
+
+    def test_table_sharing_counts(self):
+        assert iact.n_tables_for(IACTParams(4, 0.5, 0), 64) == 64
+        assert iact.n_tables_for(IACTParams(4, 0.5, 8), 64) == 8
+        assert iact.n_tables_for(IACTParams(4, 0.5, 100), 64) == 64
+
+
+class TestPerforation:
+    def test_small_pattern(self):
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=4)
+        m = perforation.execute_mask(8, p)
+        assert m.tolist() == [True, True, True, False] * 2
+
+    def test_large_pattern(self):
+        p = PerforationParams(kind=PerforationKind.LARGE, skip=4)
+        m = perforation.execute_mask(8, p)
+        assert m.tolist() == [True, False, False, False] * 2
+
+    def test_ini_fini_bounds(self):
+        p = PerforationParams(kind=PerforationKind.INI, fraction=0.25)
+        assert perforation.perforated_bounds(16, p) == (4, 16)
+        p = PerforationParams(kind=PerforationKind.FINI, fraction=0.25)
+        assert perforation.perforated_bounds(16, p) == (0, 12)
+
+    def test_herded_identical_rows(self):
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=4, herded=True)
+        m = perforation.element_masks(16, 8, p)
+        assert (m == m[0]).all()
+
+    def test_non_herded_divergent_rows(self):
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=4,
+                              herded=False)
+        m = perforation.element_masks(16, 8, p)
+        assert not (m == m[0]).all()
+        # every row still drops exactly 1/4
+        np.testing.assert_allclose(m.mean(axis=1), 0.75)
+
+    def test_perforated_loop_structural(self):
+        spec = ApproxSpec(Technique.PERFORATION,
+                          perforation=PerforationParams(
+                              kind=PerforationKind.SMALL, skip=4))
+        total, frac = perforated_loop(
+            spec, 8, lambda i, acc: acc + jnp.float32(i), jnp.float32(0))
+        # executed iterations: 0,1,2,4,5,6 -> 18
+        assert float(total) == 18.0
+        assert frac == 0.75
+
+
+class TestHierarchy:
+    def test_majority_rules_tie_is_accurate(self):
+        mask = jnp.asarray([True, False, True, False])
+        assert not bool(hierarchy.block_majority(mask))
+
+    def test_majority_forces_minority(self):
+        """Paper: group votes can FORCE non-activated elements to
+        approximate (LavaMD discussion)."""
+        mask = jnp.asarray([True, True, True, False])
+        voted = hierarchy.vote(mask, Level.BLOCK)
+        assert bool(voted.all())
+
+    def test_tile_vote_groups(self):
+        mask = jnp.asarray([True] * 3 + [False] + [False] * 3 + [True])
+        voted = hierarchy.vote(mask, Level.TILE, tile_size=4)
+        assert voted.tolist() == [True] * 4 + [False] * 4
+
+    def test_element_level_identity(self):
+        mask = jnp.asarray([True, False, True])
+        assert (hierarchy.vote(mask, Level.ELEMENT) == mask).all()
+
+
+class TestRSD:
+    def test_constant_is_zero(self):
+        assert float(rsd(jnp.ones((5,)))) == 0.0
+
+    def test_matches_paper_definition(self):
+        x = jnp.asarray([1.0, 2.0, 3.0])
+        expected = float(np.std([1, 2, 3]) / np.mean([1, 2, 3]))
+        np.testing.assert_allclose(float(rsd(x)), expected, rtol=1e-6)

@@ -1,0 +1,196 @@
+"""Per-kernel validation: shape/dtype sweeps, kernel (interpret) vs the
+pure-jnp oracle in ref.py."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.types import PerforationKind, PerforationParams
+from repro.kernels import ops, ref
+
+
+def _stableish(rng, m, k, noise=0.02):
+    """Row-block-correlated inputs: exercises TAF/iACT state transitions."""
+    base = rng.randn(1, k).astype(np.float32)
+    return np.tile(base, (m, 1)) + noise * rng.randn(m, k).astype(np.float32)
+
+
+class TestTAFMatmul:
+    @pytest.mark.parametrize("m,k,n,bm,bn", [
+        (128, 32, 64, 32, 32),
+        (256, 64, 128, 64, 64),
+        (64, 16, 32, 16, 16),
+    ])
+    def test_matches_oracle_shapes(self, m, k, n, bm, bn):
+        rng = np.random.RandomState(m + k + n)
+        x = jnp.asarray(_stableish(rng, m, k))
+        w = jnp.asarray(rng.randn(k, n).astype(np.float32))
+        y, mask = ops.taf_matmul(x, w, block_m=bm, block_n=bn,
+                                 history_size=3, prediction_size=4,
+                                 rsd_threshold=0.5)
+        yr, mr = ref.taf_matmul_ref(x, w, block_m=bm, block_n=bn,
+                                    history_size=3, prediction_size=4,
+                                    rsd_threshold=0.5)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+        assert np.array_equal(np.asarray(mask), np.asarray(mr))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(_stableish(rng, 64, 32)).astype(dtype)
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32)).astype(dtype)
+        y, mask = ops.taf_matmul(x, w, block_m=32, block_n=32,
+                                 out_dtype=jnp.float32)
+        yr, mr = ref.taf_matmul_ref(x, w, block_m=32, block_n=32,
+                                    history_size=3, prediction_size=8,
+                                    rsd_threshold=0.5)
+        atol = 1e-3 if dtype == jnp.float32 else 0.5
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=atol)
+
+    @pytest.mark.parametrize("h,p,t", [(1, 2, 0.1), (5, 16, 2.0),
+                                       (2, 512, 20.0)])
+    def test_param_sweep(self, h, p, t):
+        rng = np.random.RandomState(42)
+        x = jnp.asarray(_stableish(rng, 128, 32, noise=0.1))
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+        y, mask = ops.taf_matmul(x, w, block_m=32, block_n=32,
+                                 history_size=h, prediction_size=p,
+                                 rsd_threshold=t)
+        yr, mr = ref.taf_matmul_ref(x, w, block_m=32, block_n=32,
+                                    history_size=h, prediction_size=p,
+                                    rsd_threshold=t)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+        assert np.array_equal(np.asarray(mask), np.asarray(mr))
+
+    def test_zero_threshold_never_approximates(self):
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(rng.randn(128, 32).astype(np.float32) * 10)
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+        y, mask = ops.taf_matmul(x, w, block_m=32, block_n=32,
+                                 rsd_threshold=0.0)
+        assert not np.asarray(mask).any()
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(x @ w), rtol=2e-4, atol=1e-3)
+
+
+class TestIACTKernel:
+    @pytest.mark.parametrize("n,din,dh,dout,br,ts", [
+        (128, 16, 32, 8, 32, 4),
+        (256, 32, 64, 16, 64, 2),
+        (64, 8, 16, 8, 16, 8),
+    ])
+    def test_matches_oracle(self, n, din, dh, dout, br, ts):
+        rng = np.random.RandomState(n + din)
+        # repeat values across consecutive blocks so hits occur
+        distinct = rng.randn(max(n // (2 * br), 1), din).astype(np.float32)
+        x = jnp.asarray(np.repeat(distinct, 2 * br, axis=0)[:n])
+        w1 = jnp.asarray(rng.randn(din, dh).astype(np.float32) * 0.1)
+        w2 = jnp.asarray(rng.randn(dh, dout).astype(np.float32) * 0.1)
+        y, mask = ops.iact_rowfn(x, w1, w2, block_rows=br, table_size=ts,
+                                 threshold=0.5)
+        yr, mr = ref.iact_rowfn_ref(x, w1, w2, block_rows=br, table_size=ts,
+                                    threshold=0.5)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+        assert np.array_equal(np.asarray(mask), np.asarray(mr))
+        assert np.asarray(mask).any()  # some blocks must hit
+
+    def test_tiny_threshold_all_accurate(self):
+        rng = np.random.RandomState(3)
+        x = jnp.asarray(rng.randn(64, 16).astype(np.float32))
+        w1 = jnp.asarray(rng.randn(16, 32).astype(np.float32) * 0.1)
+        w2 = jnp.asarray(rng.randn(32, 8).astype(np.float32) * 0.1)
+        y, mask = ops.iact_rowfn(x, w1, w2, block_rows=32, threshold=1e-9)
+        assert not np.asarray(mask).any()
+
+
+class TestPerforatedMatmul:
+    @pytest.mark.parametrize("kind,arg", [
+        (PerforationKind.SMALL, 2), (PerforationKind.SMALL, 4),
+        (PerforationKind.LARGE, 4), (PerforationKind.INI, 0.5),
+        (PerforationKind.FINI, 0.25),
+    ])
+    def test_matches_oracle(self, kind, arg):
+        rng = np.random.RandomState(5)
+        x = jnp.asarray(rng.randn(64, 256).astype(np.float32))
+        w = jnp.asarray(rng.randn(256, 64).astype(np.float32))
+        if kind in (PerforationKind.SMALL, PerforationKind.LARGE):
+            p = PerforationParams(kind=kind, skip=arg)
+        else:
+            p = PerforationParams(kind=kind, fraction=arg)
+        y = ops.perforated_matmul(x, w, block_m=32, block_n=32, block_k=32,
+                                  perfo=p)
+        yr = ref.perforated_matmul_ref(x, w, block_k=32, perfo=p)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
+
+    def test_no_perforation_is_exact(self):
+        rng = np.random.RandomState(6)
+        x = jnp.asarray(rng.randn(64, 128).astype(np.float32))
+        w = jnp.asarray(rng.randn(128, 64).astype(np.float32))
+        y = ops.perforated_matmul(x, w, block_m=32, block_n=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(x @ w),
+                                   rtol=2e-4, atol=1e-3)
+
+    def test_rescale(self):
+        rng = np.random.RandomState(7)
+        x = jnp.asarray(np.ones((32, 128), np.float32))
+        w = jnp.asarray(np.ones((128, 32), np.float32))
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=2)
+        y = ops.perforated_matmul(x, w, block_m=32, block_n=32, block_k=32,
+                                  perfo=p, rescale=True)
+        np.testing.assert_allclose(np.asarray(y), 128.0, rtol=1e-5)
+
+
+class TestPerforatedAttention:
+    @pytest.mark.parametrize("b,hq,hkv,sq,skv,d", [
+        (1, 2, 2, 64, 64, 32),
+        (2, 4, 2, 64, 128, 32),   # GQA + decode offset
+        (1, 8, 1, 32, 96, 16),    # MQA
+    ])
+    def test_full_matches_oracle(self, b, hq, hkv, sq, skv, d):
+        rng = np.random.RandomState(b + hq + sq)
+        q = jnp.asarray(rng.randn(b, hq, sq, d).astype(np.float32))
+        k = jnp.asarray(rng.randn(b, hkv, skv, d).astype(np.float32))
+        v = jnp.asarray(rng.randn(b, hkv, skv, d).astype(np.float32))
+        o = ops.flash_attention(q, k, v, block_q=32, block_kv=32)
+        rep = hq // hkv
+        orf = ref.attention_ref(q, jnp.repeat(k, rep, 1),
+                                jnp.repeat(v, rep, 1), causal=True)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-4)
+
+    @pytest.mark.parametrize("kind,arg", [
+        (PerforationKind.INI, 0.5), (PerforationKind.FINI, 0.25),
+        (PerforationKind.SMALL, 2), (PerforationKind.LARGE, 2),
+    ])
+    def test_perforated_matches_oracle(self, kind, arg):
+        rng = np.random.RandomState(11)
+        q = jnp.asarray(rng.randn(1, 2, 64, 32).astype(np.float32))
+        k = jnp.asarray(rng.randn(1, 2, 128, 32).astype(np.float32))
+        v = jnp.asarray(rng.randn(1, 2, 128, 32).astype(np.float32))
+        if kind in (PerforationKind.SMALL, PerforationKind.LARGE):
+            p = PerforationParams(kind=kind, skip=arg)
+        else:
+            p = PerforationParams(kind=kind, fraction=arg)
+        o = ops.perforated_attention(q, k, v, block_q=32, block_kv=32,
+                                     perfo=p)
+        orf = ref.attention_ref(q, k, v, causal=True, block_kv=32, perfo=p)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-4)
+
+    def test_non_causal(self):
+        rng = np.random.RandomState(12)
+        q = jnp.asarray(rng.randn(1, 2, 32, 16).astype(np.float32))
+        k = jnp.asarray(rng.randn(1, 2, 64, 16).astype(np.float32))
+        v = jnp.asarray(rng.randn(1, 2, 64, 16).astype(np.float32))
+        o = ops.perforated_attention(q, k, v, block_q=32, block_kv=32,
+                                     causal=False)
+        orf = ref.attention_ref(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(orf), atol=1e-4)
+
+    def test_bf16(self):
+        rng = np.random.RandomState(13)
+        q = jnp.asarray(rng.randn(1, 2, 32, 16), jnp.bfloat16)
+        k = jnp.asarray(rng.randn(1, 2, 32, 16), jnp.bfloat16)
+        v = jnp.asarray(rng.randn(1, 2, 32, 16), jnp.bfloat16)
+        o = ops.flash_attention(q, k, v, block_q=32, block_kv=32)
+        orf = ref.attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(o, np.float32),
+                                   np.asarray(orf, np.float32), atol=0.05)

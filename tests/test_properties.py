@@ -1,0 +1,189 @@
+"""Property-based tests (hypothesis) for system invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (IACTParams, Level, PerforationKind,
+                        PerforationParams, TAFParams)
+from repro.core import hierarchy, iact, perforation, taf
+from repro.core.rsd import rsd
+from repro.models import common
+from repro.models.lm import chunked_xent
+from repro.optim import compress
+
+SET = settings(max_examples=25, deadline=None)
+
+
+class TestRSDProperties:
+    @SET
+    @given(st.lists(st.floats(0.1, 100.0), min_size=2, max_size=8),
+           st.floats(0.01, 50.0))
+    def test_scale_invariance(self, xs, c):
+        x = jnp.asarray(xs)
+        r1 = float(rsd(x))
+        r2 = float(rsd(c * x))
+        np.testing.assert_allclose(r1, r2, rtol=1e-3, atol=1e-5)
+
+    @SET
+    @given(st.lists(st.floats(-100, 100), min_size=2, max_size=8))
+    def test_nonnegative_finite(self, xs):
+        r = float(rsd(jnp.asarray(xs)))
+        assert r >= 0.0 and np.isfinite(r)
+
+
+class TestPerforationProperties:
+    @SET
+    @given(st.integers(2, 32), st.integers(1, 8))
+    def test_small_density(self, skip, mult):
+        """Small perforation over a whole number of periods drops EXACTLY
+        1/skip of iterations."""
+        n = skip * mult
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=skip)
+        m = perforation.execute_mask(n, p)
+        assert m.sum() == n - mult
+
+    @SET
+    @given(st.integers(2, 32), st.integers(1, 8))
+    def test_large_density(self, skip, mult):
+        n = skip * mult
+        p = PerforationParams(kind=PerforationKind.LARGE, skip=skip)
+        assert perforation.execute_mask(n, p).sum() == mult
+
+    @SET
+    @given(st.integers(4, 64),
+           st.floats(0.0, 0.99, exclude_max=False))
+    def test_ini_fini_complementary_counts(self, n, frac):
+        pi = PerforationParams(kind=PerforationKind.INI, fraction=frac)
+        pf = PerforationParams(kind=PerforationKind.FINI, fraction=frac)
+        mi = perforation.execute_mask(n, pi)
+        mf = perforation.execute_mask(n, pf)
+        assert mi.sum() == mf.sum() == n - int(np.floor(frac * n))
+
+    @SET
+    @given(st.integers(2, 16), st.integers(2, 8))
+    def test_kept_indices_sorted_unique(self, skip, mult):
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=skip)
+        k = perforation.kept_indices(skip * mult, p)
+        assert (np.diff(k) > 0).all()
+
+
+class TestHierarchyProperties:
+    @SET
+    @given(st.lists(st.booleans(), min_size=1, max_size=64))
+    def test_block_vote_is_constant(self, bits):
+        voted = hierarchy.vote(jnp.asarray(bits), Level.BLOCK)
+        v = np.asarray(voted)
+        assert (v == v[0]).all()
+
+    @SET
+    @given(st.lists(st.booleans(), min_size=8, max_size=64).filter(
+        lambda b: len(b) % 4 == 0))
+    def test_tile_vote_idempotent(self, bits):
+        m = jnp.asarray(bits)
+        v1 = hierarchy.vote(m, Level.TILE, tile_size=4)
+        v2 = hierarchy.vote(v1, Level.TILE, tile_size=4)
+        assert (np.asarray(v1) == np.asarray(v2)).all()
+
+    @SET
+    @given(st.integers(1, 6))
+    def test_unanimous_approximates(self, log2n):
+        n = 2 ** log2n
+        m = jnp.ones((n,), bool)
+        for level in (Level.ELEMENT, Level.TILE, Level.BLOCK):
+            assert bool(hierarchy.vote(m, level, tile_size=min(n, 4)).all())
+
+
+class TestTAFProperties:
+    @SET
+    @given(st.integers(1, 5), st.integers(1, 16), st.floats(0.0, 5.0))
+    def test_outputs_always_finite(self, h, p, t):
+        params = TAFParams(h, p, t)
+        rng = np.random.RandomState(42)
+        xs = jnp.asarray(rng.standard_normal((10, 4, 3)))
+        ys, _, frac = taf.run_sequence(params, xs, lambda x: jnp.sum(x, -1))
+        assert np.isfinite(np.asarray(ys)).all()
+        assert 0.0 <= float(frac) <= 1.0
+
+    @SET
+    @given(st.integers(1, 4), st.integers(1, 8))
+    def test_threshold_zero_no_approx_on_noise(self, h, p):
+        params = TAFParams(h, p, 0.0)
+        rng = np.random.RandomState(7)
+        xs = jnp.asarray(rng.standard_normal((12, 4, 3)) * 10)
+        _, _, frac = taf.run_sequence(params, xs, lambda x: jnp.sum(x, -1))
+        assert float(frac) == 0.0
+
+
+class TestIACTProperties:
+    @SET
+    @given(st.integers(1, 8), st.floats(0.01, 2.0))
+    def test_identical_inputs_always_hit_after_first(self, tsize, thresh):
+        params = IACTParams(tsize, thresh, 0)
+        xs = jnp.ones((6, 4, 3))
+        ys, _, frac = iact.run_sequence(params, xs, lambda x: jnp.sum(x, -1))
+        # first invocation misses; the rest hit
+        np.testing.assert_allclose(float(frac), 5 / 6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(ys), 3.0, atol=1e-5)
+
+
+class TestCompressionProperties:
+    @SET
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_error_feedback_exact_accumulation(self, seed):
+        """Sum of dequantized grads + final residual == sum of true grads
+        (EF makes compression unbiased in accumulation)."""
+        rng = np.random.RandomState(seed)
+        g_true = [jnp.asarray(rng.standard_normal((8,)) * 10 ** rng.uniform(
+            -3, 3)) for _ in range(4)]
+        ef = compress.init_ef(g_true[0])
+        acc_hat = jnp.zeros((8,))
+        acc_true = jnp.zeros((8,))
+        for g in g_true:
+            (q, scale), g_hat, ef = compress.compress_grads(g, ef)
+            acc_hat = acc_hat + g_hat
+            acc_true = acc_true + g
+        total_err = np.abs(np.asarray(
+            acc_true - acc_hat - ef.residual)).max()
+        assert total_err < 1e-3 * max(1.0, float(jnp.abs(acc_true).max()))
+
+    @SET
+    @given(st.integers(0, 2 ** 31 - 1))
+    def test_quantize_bounded_error(self, seed):
+        rng = np.random.RandomState(seed)
+        g = jnp.asarray(rng.standard_normal((64,)))
+        q, scale = compress.quantize_tensor(g)
+        err = np.abs(np.asarray(compress.dequantize_tensor(q, scale) - g))
+        assert err.max() <= float(scale) * 0.5 + 1e-7
+
+
+class TestModelMathProperties:
+    @SET
+    @given(st.integers(1, 3), st.integers(2, 5), st.integers(1, 3))
+    def test_chunked_attention_matches_full(self, b, s_mult, h):
+        rng = np.random.RandomState(b * 100 + s_mult * 10 + h)
+        sq = 8 * s_mult
+        q = jnp.asarray(rng.standard_normal((b, h, sq, 16)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, h, sq, 16)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((b, h, sq, 16)), jnp.float32)
+        out_c = common.chunked_attention(q, k, v, causal=True, q_chunk=8,
+                                         kv_chunk=8)
+        out_f = common.full_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out_c), np.asarray(out_f),
+                                   atol=2e-5)
+
+    @SET
+    @given(st.integers(1, 3), st.integers(1, 4))
+    def test_chunked_xent_matches_direct(self, b, nc):
+        rng = np.random.RandomState(b * 7 + nc)
+        s, d, v = nc * 4, 8, 16
+        h = jnp.asarray(rng.standard_normal((b, s, d)), jnp.float32)
+        w = jnp.asarray(rng.standard_normal((d, v)), jnp.float32)
+        y = jnp.asarray(rng.randint(0, v, (b, s)))
+        total, count = chunked_xent(h, w, y, chunk=4)
+        logits = h @ w
+        logz = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, y[..., None], -1)[..., 0]
+        np.testing.assert_allclose(float(total),
+                                   float(jnp.sum(logz - gold)), rtol=1e-4)
+        assert float(count) == b * s

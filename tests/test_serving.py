@@ -1,0 +1,69 @@
+"""Continuous-batching serving engine tests."""
+import dataclasses
+
+import numpy as np
+import jax
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core.types import parse_pragma
+from repro.models import build
+from repro.serving import Request, ServingEngine
+
+
+def _engine(taf=False, slots=3):
+    cfg = dataclasses.replace(get_smoke_config("qwen3-1.7b"), remat=False)
+    if taf:
+        cfg = dataclasses.replace(
+            cfg, approx_decode=parse_pragma("memo(out:2:4:50.0) level(team)"))
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, ServingEngine(model, params, slots=slots, max_len=48,
+                              prompt_len=8)
+
+
+def test_engine_drains_queue_and_respects_budgets():
+    cfg, eng = _engine()
+    rng = np.random.RandomState(0)
+    reqs = [Request(uid=i,
+                    prompt=rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
+                    max_new_tokens=5 + i) for i in range(7)]
+    for r in reqs:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.finished == 7
+    for r in reqs:
+        assert len(r.output) == r.max_new_tokens
+        assert r.finished_at is not None and r.first_token_at is not None
+
+
+def test_continuous_batching_overlaps_requests():
+    """More requests than slots: later requests start before earlier long
+    ones finish on other slots (no head-of-line blocking)."""
+    cfg, eng = _engine(slots=2)
+    rng = np.random.RandomState(1)
+    long_req = Request(uid=0, prompt=rng.randint(0, cfg.vocab_size, 8)
+                       .astype(np.int32), max_new_tokens=20)
+    shorts = [Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 8)
+                      .astype(np.int32), max_new_tokens=3)
+              for i in range(1, 5)]
+    eng.submit(long_req)
+    for r in shorts:
+        eng.submit(r)
+    stats = eng.run_until_drained()
+    assert stats.finished == 5
+    assert max(s.finished_at for s in shorts) >= shorts[-1].first_token_at
+    # at least one short request finished before the long one
+    assert min(s.finished_at for s in shorts) < long_req.finished_at
+
+
+def test_engine_reports_taf_skips():
+    cfg, eng = _engine(taf=True)
+    rng = np.random.RandomState(2)
+    for i in range(3):
+        eng.submit(Request(uid=i, prompt=rng.randint(0, cfg.vocab_size, 8)
+                           .astype(np.int32), max_new_tokens=12))
+    stats = eng.run_until_drained()
+    assert stats.finished == 3
+    assert stats.taf_total > 0
+    assert stats.taf_skip_fraction > 0.0  # huge threshold must trigger TAF

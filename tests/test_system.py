@@ -1,0 +1,138 @@
+"""End-to-end behaviour tests for the full system."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "examples"))
+
+
+def test_training_reduces_loss(tmp_path):
+    """Full driver: 30 steps on the synthetic pipeline reduce the loss."""
+    from repro.launch import train as train_mod
+    losses = train_mod.main([
+        "--arch", "qwen3-1.7b", "--smoke", "--steps", "30", "--batch", "4",
+        "--seq-len", "64", "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+        "--log-every", "100"])
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_checkpoint_resume_bit_exact(tmp_path):
+    """Fault-tolerance contract: (20 steps) == (10 steps, 'crash', resume
+    10 more) -- identical final loss, because data replay is deterministic
+    and checkpoints capture (params, opt_state, step)."""
+    from repro.launch import train as train_mod
+    full = train_mod.main([
+        "--arch", "deepseek-7b", "--smoke", "--steps", "20", "--batch", "4",
+        "--seq-len", "32", "--log-every", "100"])
+
+    train_mod.main([
+        "--arch", "deepseek-7b", "--smoke", "--steps", "10", "--batch", "4",
+        "--seq-len", "32", "--ckpt-dir", str(tmp_path), "--ckpt-every", "10",
+        "--log-every", "100"])
+    resumed = train_mod.main([
+        "--arch", "deepseek-7b", "--smoke", "--steps", "20", "--batch", "4",
+        "--seq-len", "32", "--ckpt-dir", str(tmp_path), "--resume",
+        "--log-every", "100"])
+    np.testing.assert_allclose(resumed[-1], full[-1], rtol=1e-4)
+
+
+def test_serve_driver_with_taf():
+    """Serving driver runs and TAF reports skipped layer-steps."""
+    from repro.launch import serve as serve_mod
+    gen = serve_mod.main(["--arch", "deepseek-7b", "--smoke", "--batch", "2",
+                          "--prompt-len", "8", "--gen", "8",
+                          "--taf", "memo(out:2:4:50.0)"])
+    assert gen.shape == (2, 8)
+
+
+def test_greedy_decode_deterministic():
+    from repro.configs import get_smoke_config
+    from repro.models import build
+    from repro.launch import steps as steps_mod
+    cfg = dataclasses.replace(get_smoke_config("qwen3-1.7b"), remat=False)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tokens = jnp.asarray(np.random.RandomState(0).randint(
+        0, cfg.vocab_size, (2, 8)), jnp.int32)
+    outs = []
+    for _ in range(2):
+        prefill = jax.jit(steps_mod.make_prefill_step(model, 16))
+        serve = jax.jit(steps_mod.make_serve_step(model))
+        logits, cache = prefill(params, {"tokens": tokens})
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        seq = [np.asarray(tok)]
+        for t in range(4):
+            tok, _, cache = serve(params, cache, tok, jnp.int32(8 + t))
+            seq.append(np.asarray(tok))
+        outs.append(np.stack(seq))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_paper_qualitative_claims():
+    """Validate the paper's core claims on the app suite (EXPERIMENTS.md
+    section Paper-validation):
+      TAF reaches high approx fractions at <10% error on Blackscholes;
+      MiniFE-class iterative implicit solvers blow up under AC."""
+    from apps import blackscholes, minife_cg
+    from repro.core import (ApproxSpec, IACTParams, Level, TAFParams,
+                            Technique)
+    from repro.core.harness import mape
+
+    app = blackscholes.make_app(n_elements=256, steps=48)
+    exact = app.exact()
+    taf = app.run(ApproxSpec(Technique.TAF, Level.ELEMENT,
+                             taf=TAFParams(3, 64, 0.5)))
+    ia = app.run(ApproxSpec(Technique.IACT, Level.ELEMENT,
+                            iact=IACTParams(4, 0.5, 0)))
+    taf_err = mape(exact.qoi, taf.qoi)
+    ia_err = mape(exact.qoi, ia.qoi)
+    assert taf_err < 0.10 and ia_err < 0.10
+    assert taf.approx_fraction > 0.5
+
+    cg = minife_cg.make_app(n=32)
+    cg_exact = cg.exact()
+    cg_taf = cg.run(ApproxSpec(Technique.TAF, Level.ELEMENT,
+                               taf=TAFParams(3, 8, 0.5)))
+    cg_err = mape(cg_exact.qoi, cg_taf.qoi)
+    assert not np.isfinite(cg_err) or cg_err > 0.10, \
+        "MiniFE-class solvers must amplify AC error (paper section 4, MiniFE)"
+
+
+def test_dryrun_single_cell_subprocess():
+    """The dry-run entrypoint works end-to-end for one cheap cell (the full
+    matrix runs via `python -m repro.launch.dryrun --all`; results for all
+    80 cells are committed under results/)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch",
+         "olmoe-1b-7b", "--shape", "decode_32k", "--single-pod"],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert '"status": "ok"' in out.stdout
+
+
+def test_dryrun_results_complete():
+    """All 80 dry-run cells exist and none FAILED (40 cells x 2 meshes:
+    the brief's multi-pod requirement)."""
+    import glob
+    import json
+    d = os.path.join(REPO, "results", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("dry-run matrix not yet generated")
+    recs = []
+    for p in glob.glob(os.path.join(d, "*.json")):
+        with open(p) as f:
+            recs.append(json.load(f))
+    assert len(recs) == 80
+    assert sum(r["status"] == "FAILED" for r in recs) == 0
+    ok = sum(r["status"] == "ok" for r in recs)
+    skipped = sum(r["status"] == "skipped" for r in recs)
+    assert ok == 64 and skipped == 16  # 8 full-attn archs x long_500k x 2
