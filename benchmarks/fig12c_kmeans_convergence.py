@@ -17,7 +17,7 @@ from repro.core import Level
 from repro.core.harness import iact_grid, sweep, taf_grid
 
 
-def main(report):
+def main(report, jobs: int = 1, db_path=None):
     app = kmeans.make_app(n=1024, d=6, k=8)
     exact = app.exact()
     iters_exact = exact.extra["iters"]
@@ -25,7 +25,7 @@ def main(report):
                     levels=(Level.ELEMENT,)) + \
         iact_grid(t_sizes=(4,), thresholds=(0.5, 3.0), tables_per_block=(0,),
                   levels=(Level.ELEMENT,))
-    recs = sweep(app, grid, repeats=1)
+    recs = sweep(app, grid, repeats=1, jobs=jobs, db_path=db_path)
     conv_sp, time_sp = [], []
     for r in recs:
         it = r.extra.get("iters", iters_exact)

@@ -33,11 +33,11 @@ IACT_GRID = iact_grid(t_sizes=(2, 4), thresholds=(0.3, 0.9),
                       levels=(Level.ELEMENT, Level.BLOCK))
 
 
-def main(report):
+def main(report, jobs: int = 1, db_path=None):
     for name, (make, kw) in APPS.items():
         app = make(**kw)
         for tech, grid in (("taf", TAF_GRID), ("iact", IACT_GRID)):
-            recs = sweep(app, grid, repeats=2)
+            recs = sweep(app, grid, repeats=2, jobs=jobs, db_path=db_path)
             best = best_speedup_under_error(recs, 0.10, use_modeled=True)
             if best is None:
                 report("fig6_best_speedup", f"{name}/{tech}",

@@ -18,7 +18,7 @@ from repro.core import Level
 from repro.core.harness import perfo_grid, sweep, taf_grid
 
 
-def main(report):
+def main(report, jobs: int = 1, db_path=None):
     app = minife_cg.make_app(n=48)
     grid = taf_grid(h_sizes=(3,), p_sizes=(8,), thresholds=(0.5, 5.0),
                     levels=(Level.ELEMENT,)) + \
@@ -26,7 +26,7 @@ def main(report):
                    kinds=tuple(__import__(
                        "repro.core.types", fromlist=["PerforationKind"]
                    ).PerforationKind(k) for k in ("small", "ini")))
-    recs = sweep(app, grid, repeats=1)
+    recs = sweep(app, grid, repeats=1, jobs=jobs, db_path=db_path)
     errs = np.asarray([r.error for r in recs])
     finite = errs[np.isfinite(errs)]
     report("fig7_cg_sweep", "error_range",

@@ -1,0 +1,44 @@
+"""Pareto-aware adaptive search (harness v2) on Blackscholes/TAF.
+
+Sweeps a deliberately coarse threshold grid, then lets
+`repro.core.pareto.refine` spend a small extra budget subdividing parameter
+neighborhoods around the error/speedup front -- the successive-halving-style
+replacement for brute-force grid densification. Reports the front size and
+hypervolume before and after refinement, plus how many extra evaluations the
+budget actually bought.
+
+With --db (see benchmarks/run.py) both the coarse sweep and the refinement
+write through the same keyed cache, so re-runs are incremental.
+"""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "examples")
+
+from apps import blackscholes
+from repro.core import Level
+from repro.core.harness import sweep, taf_grid
+from repro.core.pareto import front_summary, refine
+
+COARSE = taf_grid(h_sizes=(3,), p_sizes=(8, 64), thresholds=(0.1, 1.5),
+                  levels=(Level.ELEMENT,))
+
+
+def main(report, jobs: int = 1, db_path=None):
+    # db_path=None runs purely in memory: refine already dedupes against the
+    # in-memory record pool, so no scratch file is needed.
+    app = blackscholes.make_app(n_elements=256, steps=32)
+    # use_modeled: on a CPU container measured wall speedups are noisy and
+    # mostly < 1x; the modeled (roofline) axis is deterministic.
+    recs = sweep(app, COARSE, repeats=1, jobs=jobs, db_path=db_path)
+    before = front_summary(recs, use_modeled=True)
+    report("pareto_refine", "coarse_front",
+           f"n={before['n_front']}/{before['n_records']},"
+           f"hv={before['hypervolume']:.3f}")
+    new = refine(app, recs, budget=8, rounds=2, repeats=1, jobs=jobs,
+                 db_path=db_path, use_modeled=True)
+    after = front_summary(list(recs) + new, use_modeled=True)
+    report("pareto_refine", "refined_front",
+           f"n={after['n_front']}/{after['n_records']},"
+           f"hv={after['hypervolume']:.3f},new_evals={len(new)}")

@@ -2,11 +2,18 @@
 
 Prints ``name,us_per_call,derived`` CSV lines. Usage:
 
-  PYTHONPATH=src python -m benchmarks.run [--only fig6,kernel]
+  PYTHONPATH=src python -m benchmarks.run [--only fig6,kernel] [--jobs N]
+
+``--jobs`` is threaded through to every module whose ``main`` accepts a
+``jobs`` keyword (the sweep-based figures): it sets the harness's parallel
+evaluation width (batched runner chunk size / thread-pool workers).
+``--db`` points those modules at a persistent results database, making
+re-runs resumable (cached specs are not re-executed).
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import time
 
@@ -14,7 +21,8 @@ sys.path.insert(0, "examples")
 
 from . import (fig3_table_memory, fig6_best_speedup, fig7_cg_sweep,
                fig8c_items_per_thread, fig10c_rsd_behavior, fig11c_hierarchy,
-               fig12c_kmeans_convergence, kernel_micro, roofline_table)
+               fig12c_kmeans_convergence, kernel_micro, pareto_refine,
+               roofline_table)
 
 MODULES = {
     "fig3": fig3_table_memory,
@@ -25,6 +33,7 @@ MODULES = {
     "fig11c": fig11c_hierarchy,
     "fig12c": fig12c_kmeans_convergence,
     "kernel": kernel_micro,
+    "pareto": pareto_refine,
     "roofline": roofline_table,
 }
 
@@ -34,8 +43,16 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated module keys "
                     f"(default all: {','.join(MODULES)})")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="parallel evaluation width for sweep-based modules")
+    ap.add_argument("--db", default=None,
+                    help="path to a persistent sweep DB (enables resume)")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(MODULES)
+    for key in keys:  # fail fast, before any module burns sweep time
+        if key.strip() not in MODULES:
+            ap.error(f"unknown module {key.strip()!r} "
+                     f"(choose from: {','.join(MODULES)})")
 
     print("name,us_per_call,derived")
 
@@ -44,9 +61,12 @@ def main() -> None:
 
     for key in keys:
         mod = MODULES[key.strip()]
+        accepted = inspect.signature(mod.main).parameters
+        kw = {k: v for k, v in (("jobs", args.jobs), ("db_path", args.db))
+              if k in accepted}
         t0 = time.time()
         try:
-            mod.main(report)
+            mod.main(report, **kw)
         except Exception as e:  # keep the harness running
             report(key, "ERROR", str(e)[:200])
         report(f"_{key}_total_s", f"{time.time() - t0:.1f}")

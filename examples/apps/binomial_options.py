@@ -104,4 +104,6 @@ def make_app(n_elements: int = 64, steps: int = 32, tree_steps: int = 128,
                          approx_fraction=frac,
                          flop_fraction=max(1.0 - frac, 1e-3))
 
-    return ApproxApp(name="binomial_options", run=run, error_metric="mape")
+    return ApproxApp(name="binomial_options", run=run, error_metric="mape",
+                     workload=dict(n_elements=n_elements, steps=steps,
+                                   tree_steps=tree_steps, seed=seed))

@@ -99,4 +99,5 @@ def make_app(n: int = 2048, d: int = 8, k: int = 12,
                          flop_fraction=max(iters / 40 * (1 - frac), 1e-3),
                          extra={"iters": iters})
 
-    return ApproxApp(name="kmeans", run=run, error_metric="mcr")
+    return ApproxApp(name="kmeans", run=run, error_metric="mcr",
+                     workload=dict(n=n, d=d, k=k, seed=seed))

@@ -119,4 +119,5 @@ def make_app(nx: int = 5, seed: int = 0) -> ApproxApp:
                          approx_fraction=frac,
                          flop_fraction=max(1.0 - frac, 1e-3))
 
-    return ApproxApp(name="lavamd", run=run, error_metric="mape")
+    return ApproxApp(name="lavamd", run=run, error_metric="mape",
+                     workload=dict(nx=nx, seed=seed))

@@ -99,4 +99,5 @@ def make_app(n: int = 64, seed: int = 0) -> ApproxApp:
                          flop_fraction=max(1.0 - frac, 1e-3),
                          extra={"residual": float(res)})
 
-    return ApproxApp(name="minife_cg", run=run, error_metric="mape")
+    return ApproxApp(name="minife_cg", run=run, error_metric="mape",
+                     workload=dict(n=n, seed=seed))

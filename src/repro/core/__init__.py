@@ -9,16 +9,19 @@ Public surface:
   taf / iact   -- technique state machines (functional, scan- and Pallas-safe)
   perforation  -- skip-pattern generation (small/large/ini/fini, herded)
   hierarchy    -- element/tile/block majority-rules voting
-  harness      -- the DSE execution harness + error metrics (MAPE, MCR)
+  harness      -- the DSE execution harness + error metrics (MAPE, MCR):
+                  resumable keyed-cache sweeps, parallel/batched evaluation
+  pareto       -- error/speedup Pareto front + front-guided refinement
 """
-from . import (approx, autotune, harness, hierarchy, iact, perforation,
-               rsd, taf, types)
+from . import (approx, autotune, harness, hierarchy, iact, pareto,
+               perforation, rsd, taf, types)
 from .approx import ApproxRegion, perforated_loop
 from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
                     PerforationParams, TAFParams, Technique, parse_pragma)
 
 __all__ = [
-    "approx", "autotune", "harness", "hierarchy", "iact", "perforation", "rsd", "taf",
+    "approx", "autotune", "harness", "hierarchy", "iact", "pareto",
+    "perforation", "rsd", "taf",
     "types", "ApproxRegion", "perforated_loop", "ApproxSpec", "IACTParams",
     "Level", "PerforationKind", "PerforationParams", "TAFParams", "Technique",
     "parse_pragma",

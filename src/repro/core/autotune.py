@@ -8,35 +8,29 @@
 multi-fidelity race: all configs are evaluated on a cheap fidelity (few
 repeats / reduced workload), the best `1/eta` survive to the next rung at
 higher fidelity. `random_search` is the budget-capped baseline. Both emit
-the same Record stream as harness.sweep, so benchmarks and the results
-database are drop-in compatible.
+the same Record stream as harness.sweep (via the shared
+`harness.evaluate_spec` scoring path), so benchmarks and the results
+database are drop-in compatible, and both dispatch evaluations through
+`harness.run_specs` (so `jobs > 1` uses an app's batched runner when it has
+one). For Pareto-front-guided refinement of a coarse grid, see
+`repro.core.pareto.refine`.
 """
 from __future__ import annotations
 
-import math
 import random
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Sequence
 
-from .harness import AppResult, ApproxApp, ERROR_METRICS, Record, spec_to_dict
+from .harness import AppResult, ApproxApp, Record, _make_record, run_specs
 from .types import ApproxSpec
 
 
-def _evaluate(app: ApproxApp, spec: ApproxSpec, exact: AppResult,
-              repeats: int) -> Record:
-    metric = ERROR_METRICS[app.error_metric]
-    best: Optional[AppResult] = None
-    for _ in range(max(1, repeats)):
-        r = app.run(spec)
-        if best is None or r.wall_time_s < best.wall_time_s:
-            best = r
-    return Record(
-        app=app.name, spec=spec_to_dict(spec),
-        error=metric(exact.qoi, best.qoi),
-        speedup=exact.wall_time_s / max(best.wall_time_s, 1e-12),
-        modeled_speedup=1.0 / max(best.flop_fraction, 1e-12),
-        approx_fraction=float(best.approx_fraction),
-        wall_time_s=best.wall_time_s, exact_time_s=exact.wall_time_s,
-        extra=best.extra)
+def _evaluate_all(app: ApproxApp, specs: Sequence[ApproxSpec],
+                  exact: AppResult, repeats: int, jobs: int) -> List[Record]:
+    """Score a pool of specs via harness.run_specs -- the same dispatch as
+    sweep (batched runner when the app has one, thread pool otherwise)."""
+    results = run_specs(app, specs, repeats, jobs)
+    return [_make_record(app, s, res, exact)
+            for s, res in zip(specs, results)]
 
 
 def _score(rec: Record, max_error: float) -> float:
@@ -49,12 +43,13 @@ def _score(rec: Record, max_error: float) -> float:
 
 def successive_halving(app: ApproxApp, specs: Sequence[ApproxSpec], *,
                        max_error: float = 0.10, eta: int = 3,
-                       base_repeats: int = 1,
+                       base_repeats: int = 1, jobs: int = 1,
                        seed: int = 0) -> List[Record]:
     """Multi-fidelity race over `specs`: each rung costs ~n_base cheap
     evaluations (the pool shrinks by eta while fidelity grows by eta), so
     the total is ~n x n_rungs vs n x final_fidelity for an exhaustive sweep
-    at the final fidelity. Returns the FINAL rung's records, best first."""
+    at the final fidelity. Returns the FINAL rung's records, best first.
+    `jobs > 1` evaluates each rung's pool concurrently."""
     rng = random.Random(seed)
     exact = app.exact()
     pool = list(specs)
@@ -62,7 +57,7 @@ def successive_halving(app: ApproxApp, specs: Sequence[ApproxSpec], *,
     repeats = base_repeats
     rung_records: List[Record] = []
     while pool:
-        rung_records = [_evaluate(app, s, exact, repeats) for s in pool]
+        rung_records = _evaluate_all(app, pool, exact, repeats, jobs)
         ranked = sorted(zip(rung_records, pool),
                         key=lambda rs: -_score(rs[0], max_error))
         keep = max(1, len(pool) // eta)
@@ -77,10 +72,11 @@ def successive_halving(app: ApproxApp, specs: Sequence[ApproxSpec], *,
 def random_search(app: ApproxApp, sampler: Callable[[random.Random],
                                                     ApproxSpec], *,
                   budget: int = 20, max_error: float = 0.10,
-                  repeats: int = 1, seed: int = 0) -> List[Record]:
+                  repeats: int = 1, jobs: int = 1,
+                  seed: int = 0) -> List[Record]:
     """Budget-capped random search with a spec sampler."""
     rng = random.Random(seed)
     exact = app.exact()
-    records = [_evaluate(app, sampler(rng), exact, repeats)
-               for _ in range(budget)]
+    specs = [sampler(rng) for _ in range(budget)]
+    records = _evaluate_all(app, specs, exact, repeats, jobs)
     return sorted(records, key=lambda r: -_score(r, max_error))

@@ -8,15 +8,33 @@ and error to a database."
 `sweep` does exactly that over a grid of ApproxSpecs for an application that
 follows the `ApproxApp` protocol; results land in a JSON "database" consumed
 by benchmarks/ (one module per paper figure).
+
+v2 engine (see docs/harness.md):
+
+* **Resumable.** The database is a keyed cache: every row carries
+  ``spec_hash``, the canonical hash of its spec dict, and ``sweep`` skips
+  any (app, spec_hash) pair already present in ``db_path``. Interrupted or
+  extended sweeps are therefore safe to re-invoke; re-running over a denser
+  grid evaluates only the new points.
+* **Parallel.** ``sweep(..., jobs=N)`` evaluates independent specs
+  concurrently: through the app's opt-in batched runner
+  (``ApproxApp.run_batch``, e.g. a ``jax.vmap`` over stacked spec
+  parameters) when one is provided, otherwise via a thread pool.
+* **Pareto-aware.** ``repro.core.pareto`` consumes the same Record stream:
+  ``pareto_front`` extracts the error/speedup front and ``refine`` spends an
+  extra budget subdividing parameter neighborhoods around it.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import itertools
 import json
 import os
 import time
-from typing import Callable, Dict, Iterable, List, Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
+                    Tuple, Union)
 
 import numpy as np
 
@@ -55,14 +73,41 @@ class AppResult:
 
 @dataclasses.dataclass
 class ApproxApp:
-    """An application under study (one row of paper Table 1)."""
+    """An application under study (one row of paper Table 1).
+
+    run_batch is the opt-in batchable-runner protocol: given a list of
+    specs it returns one AppResult per spec, in order. Apps that can stack
+    spec parameters into a single jitted/vmapped evaluation (see
+    examples/apps/blackscholes.py) implement it to amortize compilation and
+    device dispatch; `sweep(jobs>1)` uses it when present and falls back to
+    a host thread pool otherwise.
+    """
 
     name: str
     run: Callable[[ApproxSpec], AppResult]   # execute with a given spec
     error_metric: str = "mape"               # 'mape' or 'mcr'
+    run_batch: Optional[
+        Callable[[Sequence[ApproxSpec]], List[AppResult]]] = None
+    # Workload fingerprint (problem sizes, seeds, ...). Part of the DB cache
+    # key: the same app name at a different size must not share cached rows.
+    workload: Dict = dataclasses.field(default_factory=dict)
 
     def exact(self) -> AppResult:
         return self.run(ApproxSpec())
+
+    @property
+    def workload_hash(self) -> str:
+        return workload_hash(self.workload)
+
+
+def workload_hash(workload: Dict) -> str:
+    """Fingerprint of an app's workload parameters ("" = unspecified)."""
+    if not workload:
+        return ""
+    d = {k: _norm_value(v) for k, v in workload.items()}
+    return hashlib.sha1(json.dumps(
+        d, sort_keys=True, separators=(",", ":"), default=str
+    ).encode()).hexdigest()[:12]
 
 
 @dataclasses.dataclass
@@ -76,6 +121,12 @@ class Record:
     wall_time_s: float
     exact_time_s: float
     extra: Dict
+    spec_hash: str = ""            # canonical cache key (filled by the engine)
+    workload: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if not self.spec_hash:
+            self.spec_hash = spec_hash(self.spec)
 
     def to_json(self) -> Dict:
         return dataclasses.asdict(self)
@@ -96,6 +147,55 @@ def spec_to_dict(spec: ApproxSpec) -> Dict:
     return d
 
 
+def spec_from_dict(d: Dict) -> ApproxSpec:
+    """Inverse of spec_to_dict -- reconstruct the ApproxSpec a DB row or a
+    Pareto-refinement candidate describes."""
+    tech = Technique(d.get("technique", "none"))
+    level = Level(d.get("level", "element"))
+    if tech == Technique.TAF:
+        return ApproxSpec(tech, level, taf=TAFParams(
+            history_size=int(d["hSize"]), prediction_size=int(d["pSize"]),
+            rsd_threshold=float(d["thresh"])))
+    if tech == Technique.IACT:
+        return ApproxSpec(tech, level, iact=IACTParams(
+            table_size=int(d["tSize"]), threshold=float(d["thresh"]),
+            tables_per_block=int(d["tPerBlock"])))
+    if tech == Technique.PERFORATION:
+        return ApproxSpec(tech, level, perforation=PerforationParams(
+            kind=PerforationKind(d["kind"]), skip=int(d.get("skip", 4)),
+            fraction=float(d.get("fraction", 0.25)),
+            herded=bool(d.get("herded", True))))
+    return ApproxSpec()
+
+
+def _norm_value(v):
+    """Value normalization for hashing: integral floats become ints so a
+    spec hashes identically before and after a JSON round-trip (5 vs 5.0)."""
+    if isinstance(v, bool):
+        return v
+    if isinstance(v, float) and v.is_integer():
+        return int(v)
+    return v
+
+
+def spec_key(spec: Union[ApproxSpec, Dict]) -> str:
+    """Canonical JSON form of a spec (sorted keys, value-normalized) -- the
+    string that gets hashed into the DB cache key."""
+    d = spec_to_dict(spec) if isinstance(spec, ApproxSpec) else dict(spec)
+    d = {k: _norm_value(v) for k, v in d.items()}
+    return json.dumps(d, sort_keys=True, separators=(",", ":"))
+
+
+def spec_hash(spec: Union[ApproxSpec, Dict]) -> str:
+    return hashlib.sha1(spec_key(spec).encode()).hexdigest()[:12]
+
+
+def record_from_row(row: Dict) -> Record:
+    """Rehydrate a DB row (schema v1 rows lack spec_hash: it is recomputed)."""
+    fields = {f.name for f in dataclasses.fields(Record)}
+    return Record(**{k: v for k, v in row.items() if k in fields})
+
+
 def _timed(fn: Callable[[], AppResult], repeats: int) -> AppResult:
     """Best-of-N timing: the paper runs 3 trials (8 for Blackscholes) and
     reports means; on a shared CPU container min-of-N is the lower-noise
@@ -108,41 +208,152 @@ def _timed(fn: Callable[[], AppResult], repeats: int) -> AppResult:
     return best
 
 
-def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
-          db_path: Optional[str] = None, verbose: bool = False) -> List[Record]:
-    """Run `app` exactly once per spec (plus the exact baseline), computing
-    error vs. the exact QoI and speedups; append to the JSON database."""
-    exact = _timed(lambda: app.exact(), repeats)
+def evaluate_spec(app: ApproxApp, spec: ApproxSpec, exact: AppResult,
+                  repeats: int = 1) -> Record:
+    """Evaluate one spec against a pre-measured exact baseline -> Record.
+
+    The single scoring path shared by sweep, autotune, and pareto.refine.
+    """
+    res = _timed(lambda: app.run(spec), repeats)
+    return _make_record(app, spec, res, exact)
+
+
+def _make_record(app: ApproxApp, spec: ApproxSpec, res: AppResult,
+                 exact: AppResult) -> Record:
     metric = ERROR_METRICS[app.error_metric]
-    records: List[Record] = []
-    for spec in specs:
-        res = _timed(lambda: app.run(spec), repeats)
-        err = metric(exact.qoi, res.qoi)
-        rec = Record(
-            app=app.name,
-            spec=spec_to_dict(spec),
-            error=err,
-            speedup=exact.wall_time_s / max(res.wall_time_s, 1e-12),
-            modeled_speedup=1.0 / max(res.flop_fraction, 1e-12),
-            approx_fraction=float(res.approx_fraction),
-            wall_time_s=res.wall_time_s,
-            exact_time_s=exact.wall_time_s,
-            extra=res.extra,
-        )
-        records.append(rec)
-        if verbose:
-            print(f"[{app.name}] {rec.spec} err={err:.4g} "
-                  f"speedup={rec.speedup:.2f}x modeled={rec.modeled_speedup:.2f}x")
-    if db_path:
-        save_db(records, db_path, append=True)
-    return records
+    return Record(
+        app=app.name,
+        spec=spec_to_dict(spec),
+        error=metric(exact.qoi, res.qoi),
+        speedup=exact.wall_time_s / max(res.wall_time_s, 1e-12),
+        modeled_speedup=1.0 / max(res.flop_fraction, 1e-12),
+        approx_fraction=float(res.approx_fraction),
+        wall_time_s=res.wall_time_s,
+        exact_time_s=exact.wall_time_s,
+        extra=res.extra,
+        workload=dict(app.workload),
+    )
 
 
-def save_db(records: Sequence[Record], path: str, append: bool = False) -> None:
+def _run_batched(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int,
+                 batch_size: int) -> List[AppResult]:
+    """Batched-runner path: chunk specs and take the per-spec best of N
+    batch invocations (same best-of-N statistic as _timed)."""
+    out: List[AppResult] = []
+    for lo in range(0, len(specs), max(1, batch_size)):
+        chunk = list(specs[lo:lo + max(1, batch_size)])
+        best: List[Optional[AppResult]] = [None] * len(chunk)
+        for _ in range(max(1, repeats)):
+            results = app.run_batch(chunk)
+            if len(results) != len(chunk):
+                raise ValueError(
+                    f"{app.name}.run_batch returned {len(results)} results "
+                    f"for {len(chunk)} specs")
+            for i, r in enumerate(results):
+                if best[i] is None or r.wall_time_s < best[i].wall_time_s:
+                    best[i] = r
+        out.extend(best)
+    return out
+
+
+def run_specs(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int = 1,
+              jobs: int = 1) -> List[AppResult]:
+    """Evaluate specs with best-of-`repeats` timing, dispatching to the
+    app's batched runner (chunks of `jobs`) or a thread pool when jobs > 1.
+    The single parallel-dispatch path shared by sweep and the autotuners."""
+    specs = list(specs)
+    if jobs > 1 and app.run_batch is not None:
+        return _run_batched(app, specs, repeats, batch_size=jobs)
+    if jobs > 1:
+        with ThreadPoolExecutor(max_workers=jobs) as pool:
+            return list(pool.map(
+                lambda s: _timed(lambda: app.run(s), repeats), specs))
+    return [_timed(lambda: app.run(s), repeats) for s in specs]
+
+
+def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
+          db_path: Optional[str] = None, verbose: bool = False, *,
+          jobs: int = 1, resume: bool = True) -> List[Record]:
+    """Run `app` once per spec (plus the exact baseline), computing error
+    vs. the exact QoI and speedups; append new results to the JSON database.
+
+    Resume semantics: when `db_path` exists and `resume` is True (the
+    default), specs whose (app name, spec_hash) is already in the DB are NOT
+    re-executed -- their cached rows are returned as Records in grid order.
+    A sweep whose grid is fully cached performs zero executions (the exact
+    baseline is also skipped). Only newly-evaluated rows are appended, so
+    re-invocation is idempotent.
+
+    Parallelism: `jobs > 1` evaluates uncached specs concurrently -- via
+    `app.run_batch` (chunks of `jobs` specs per batch call) when the app
+    provides one, otherwise via a `jobs`-wide thread pool. Records come
+    back in grid order regardless of completion order, with the same
+    spec/error/modeled_speedup content as a serial sweep. Wall-clock
+    fields are per-run measurements: under the thread pool they include
+    contention noise, and a batched runner reports batch time amortized
+    per spec -- compare wall-time speedups only across rows produced the
+    same way.
+    """
+    specs = list(specs)
+    hashes = [spec_hash(s) for s in specs]
+
+    cached: Dict[str, Record] = {}
+    if db_path and resume and os.path.exists(db_path):
+        want = set(hashes)
+        wkey = app.workload_hash
+        for row in load_db(db_path):
+            h = row.get("spec_hash") or spec_hash(row.get("spec", {}))
+            if (row.get("app") == app.name and h in want and h not in cached
+                    and workload_hash(row.get("workload", {})) == wkey):
+                row = dict(row, spec_hash=h)
+                cached[h] = record_from_row(row)
+
+    # Dedupe uncached work (a grid may legitimately repeat a canonical spec).
+    todo: List[Tuple[str, ApproxSpec]] = []
+    seen = set()
+    for h, s in zip(hashes, specs):
+        if h not in cached and h not in seen:
+            seen.add(h)
+            todo.append((h, s))
+
+    fresh: Dict[str, Record] = {}
+    if todo:
+        exact = _timed(lambda: app.exact(), repeats)
+        results = run_specs(app, [s for _, s in todo], repeats, jobs)
+        for (h, s), res in zip(todo, results):
+            rec = _make_record(app, s, res, exact)
+            fresh[h] = rec
+            if verbose:
+                print(f"[{app.name}] {rec.spec} err={rec.error:.4g} "
+                      f"speedup={rec.speedup:.2f}x "
+                      f"modeled={rec.modeled_speedup:.2f}x")
+
+    if db_path and fresh:
+        # resume=False means "re-measure": the fresh rows must replace any
+        # stale cached rows instead of being dropped by the append dedupe.
+        save_db(list(fresh.values()), db_path, append=True,
+                overwrite=not resume)
+    return [cached[h] if h in cached else fresh[h] for h in hashes]
+
+
+def save_db(records: Sequence[Record], path: str, append: bool = False,
+            overwrite: bool = False) -> None:
+    """Persist records. With append=True, existing rows are kept and, by
+    default, incoming rows that duplicate an existing cache key
+    (app, spec_hash, workload_hash) are dropped, so repeated saves of the
+    same sweep are idempotent. overwrite=True flips the precedence: the
+    incoming rows replace same-key existing rows (used by resume=False
+    re-measurement)."""
     rows = [r.to_json() for r in records]
     if append and os.path.exists(path):
-        with open(path) as f:
-            rows = json.load(f) + rows
+        existing = load_db(path)
+        if overwrite:
+            incoming = {_row_key(r) for r in rows}
+            rows = [r for r in existing
+                    if _row_key(r) not in incoming] + rows
+        else:
+            have = {_row_key(r) for r in existing}
+            rows = existing + [r for r in rows if _row_key(r) not in have]
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
@@ -153,6 +364,20 @@ def save_db(records: Sequence[Record], path: str, append: bool = False) -> None:
 def load_db(path: str) -> List[Dict]:
     with open(path) as f:
         return json.load(f)
+
+
+def _row_key(row: Dict) -> Tuple[str, str, str]:
+    return (row.get("app"),
+            row.get("spec_hash") or spec_hash(row.get("spec", {})),
+            workload_hash(row.get("workload", {})))
+
+
+def db_index(rows: Sequence[Dict]) -> Dict[Tuple[str, str, str], Dict]:
+    """Index DB rows by their cache key (app, spec_hash, workload_hash)."""
+    out: Dict[Tuple[str, str, str], Dict] = {}
+    for row in rows:
+        out.setdefault(_row_key(row), row)
+    return out
 
 
 # ----------------------------------------------------------------------------

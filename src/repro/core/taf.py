@@ -73,8 +73,16 @@ def _summary(y: jnp.ndarray) -> jnp.ndarray:
 
 
 def _post_accurate(state: TAFState, y: jnp.ndarray, params: TAFParams,
-                   updated_mask: jnp.ndarray) -> TAFState:
-    """Window push + regime evaluation for elements that ran accurately."""
+                   updated_mask: jnp.ndarray,
+                   rsd_threshold=None) -> TAFState:
+    """Window push + regime evaluation for elements that ran accurately.
+
+    `rsd_threshold` overrides params.rsd_threshold; it may be a traced
+    scalar, which is what lets a batched runner `jax.vmap` one compiled
+    sweep over a stack of thresholds (the structural params stay static).
+    """
+    if rsd_threshold is None:
+        rsd_threshold = params.rsd_threshold
     s = _summary(y)
     new_window = jnp.concatenate(
         [state.window[:, 1:], s[:, None]], axis=1)
@@ -84,7 +92,7 @@ def _post_accurate(state: TAFState, y: jnp.ndarray, params: TAFParams,
                        state.filled)
     # Regime check only for slots that just ran accurately with a full window.
     window_rsd = rsd(window, axis=1)
-    stable = (window_rsd < params.rsd_threshold) & (filled >= params.history_size)
+    stable = (window_rsd < rsd_threshold) & (filled >= params.history_size)
     remaining = jnp.where(updated_mask & stable,
                           jnp.int32(params.prediction_size), state.remaining)
     bmask = updated_mask.reshape(updated_mask.shape + (1,) * (y.ndim - 1))
@@ -94,7 +102,8 @@ def _post_accurate(state: TAFState, y: jnp.ndarray, params: TAFParams,
 
 def step(state: TAFState, accurate_fn: Callable[[], jnp.ndarray],
          params: TAFParams, level: Level = Level.ELEMENT,
-         tile_size: Optional[int] = None) -> Tuple[jnp.ndarray, TAFState, jnp.ndarray]:
+         tile_size: Optional[int] = None,
+         rsd_threshold=None) -> Tuple[jnp.ndarray, TAFState, jnp.ndarray]:
     """One invocation of a TAF-approximated region over all element slots.
 
     accurate_fn: () -> (N, ...) accurate outputs for every slot.
@@ -120,7 +129,8 @@ def step(state: TAFState, accurate_fn: Callable[[], jnp.ndarray],
         def accurate_branch(st: TAFState):
             y = accurate_fn()
             new_st = _post_accurate(st, y, params,
-                                    jnp.ones_like(elem_act))
+                                    jnp.ones_like(elem_act),
+                                    rsd_threshold=rsd_threshold)
             return y.astype(st.memo.dtype), new_st
 
         out, new_state = jax.lax.cond(block_decision, approx_branch,
@@ -134,7 +144,8 @@ def step(state: TAFState, accurate_fn: Callable[[], jnp.ndarray],
     # Approximating slots burn one prediction credit (even if group-forced
     # with remaining == 0: clamp at 0, matching the runtime's saturating
     # counter); accurate slots update window/memo/regime.
-    new_state = _post_accurate(state, y, params, ~approx_mask)
+    new_state = _post_accurate(state, y, params, ~approx_mask,
+                               rsd_threshold=rsd_threshold)
     remaining = jnp.where(approx_mask,
                           jnp.maximum(new_state.remaining - 1, 0),
                           new_state.remaining)
@@ -145,12 +156,17 @@ def run_sequence(params: TAFParams, xs: jnp.ndarray,
                  fn: Callable[[jnp.ndarray], jnp.ndarray],
                  level: Level = Level.ELEMENT,
                  out_shape: Tuple[int, ...] = (),
-                 tile_size: Optional[int] = None):
+                 tile_size: Optional[int] = None,
+                 rsd_threshold=None):
     """Apply fn over a sequence of invocations (T, N, ...) with TAF, via scan.
 
     This is the grid-stride-loop shape of paper Figure 4(d): invocation t of
     element n corresponds to grid-stride iteration t of GPU thread n.
     Returns (outputs (T, N, ...), final_state, approx_fraction scalar).
+
+    `rsd_threshold` (optional, possibly traced) overrides
+    params.rsd_threshold -- the hook the harness's batched runners use to
+    vmap one compiled sweep over a stack of thresholds.
     """
     n = xs.shape[1]
     probe = jax.eval_shape(fn, jax.ShapeDtypeStruct(xs.shape[1:], xs.dtype))
@@ -158,7 +174,8 @@ def run_sequence(params: TAFParams, xs: jnp.ndarray,
 
     def body(state, x_t):
         out, new_state, mask = step(state, lambda: fn(x_t), params, level,
-                                    tile_size=tile_size)
+                                    tile_size=tile_size,
+                                    rsd_threshold=rsd_threshold)
         return new_state, (out, mask)
 
     final, (ys, masks) = jax.lax.scan(body, state0, xs)

@@ -21,7 +21,11 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+try:  # newer jax exports shard_map at top level
+    from jax import shard_map
+except ImportError:  # e.g. jax 0.4.x: experimental home
+    from jax.experimental.shard_map import shard_map
 
 PyTree = Any
 

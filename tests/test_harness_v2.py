@@ -1,0 +1,274 @@
+"""Harness v2 engine tests: resumable keyed-cache sweeps, parallel/batched
+evaluation, and Pareto-front machinery (see docs/harness.md)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.harness import (AppResult, ApproxApp, ApproxSpec, Record,
+                                db_index, load_db, record_from_row, save_db,
+                                spec_from_dict, spec_hash, spec_key,
+                                spec_to_dict, sweep, taf_grid, iact_grid,
+                                perfo_grid)
+from repro.core.pareto import (dominates, hypervolume, pareto_front,
+                               propose_candidates, refine)
+from repro.core.types import Level, TAFParams, Technique
+
+
+def make_toy_app(counter=None):
+    """Deterministic numpy-only app: error and wall time are pure functions
+    of the TAF threshold, so parallel and serial sweeps must produce
+    IDENTICAL records (timing included)."""
+    def run(spec: ApproxSpec) -> AppResult:
+        if counter is not None:
+            counter.append(spec)
+        t = spec.taf.rsd_threshold if spec.taf else 0.0
+        qoi = np.array([1.0 + 0.1 * t, 2.0])
+        return AppResult(qoi=qoi, wall_time_s=1.0 / (1.0 + t),
+                         approx_fraction=t / (1.0 + t),
+                         flop_fraction=1.0 / (1.0 + t))
+
+    return ApproxApp("toy", run)
+
+
+def taf_spec(thresh, h=3, p=8):
+    return ApproxSpec(Technique.TAF, Level.ELEMENT,
+                      taf=TAFParams(h, p, thresh))
+
+
+GRID = [taf_spec(t) for t in (0.1, 0.5, 1.0, 2.0)]
+
+
+# ---------------------------------------------------------------- spec keys
+
+def test_spec_hash_roundtrips_through_json():
+    for spec in taf_grid(h_sizes=(2,), p_sizes=(8,), thresholds=(0.5, 5)) + \
+            iact_grid(t_sizes=(2,), thresholds=(0.3,), tables_per_block=(1,)) + \
+            perfo_grid(skips=(4,), fractions=(0.25,)):
+        d = json.loads(json.dumps(spec_to_dict(spec)))
+        assert spec_hash(d) == spec_hash(spec)
+        assert spec_hash(spec_from_dict(d)) == spec_hash(spec)
+
+
+def test_spec_hash_normalizes_int_float():
+    assert spec_hash(taf_spec(5)) == spec_hash(taf_spec(5.0))
+    assert spec_key(taf_spec(5)) == spec_key(taf_spec(5.0))
+
+
+# ------------------------------------------------------------------ resume
+
+def test_resume_skips_cached_specs(tmp_path):
+    db = str(tmp_path / "db.json")
+    calls = []
+    app = make_toy_app(calls)
+    first = sweep(app, GRID, repeats=1, db_path=db)
+    assert len(calls) == len(GRID) + 1  # grid + exact baseline
+    second = sweep(app, GRID, repeats=1, db_path=db)
+    assert len(calls) == len(GRID) + 1  # fully cached: ZERO new executions
+    assert [r.to_json() for r in second] == [r.to_json() for r in first]
+
+
+def test_resume_densifies_grid(tmp_path):
+    db = str(tmp_path / "db.json")
+    calls = []
+    app = make_toy_app(calls)
+    sweep(app, GRID, repeats=1, db_path=db)
+    n0 = len(calls)
+    denser = GRID + [taf_spec(0.25), taf_spec(0.75)]
+    recs = sweep(app, denser, repeats=1, db_path=db)
+    # only the 2 new specs (+ a fresh exact baseline) were executed
+    assert len(calls) == n0 + 3
+    assert len(recs) == len(denser)
+    assert [r.spec_hash for r in recs] == [spec_hash(s) for s in denser]
+
+
+def test_db_append_is_idempotent(tmp_path):
+    db = str(tmp_path / "db.json")
+    app = make_toy_app()
+    sweep(app, GRID, repeats=1, db_path=db)
+    rows0 = load_db(db)
+    sweep(app, GRID, repeats=1, db_path=db)
+    assert load_db(db) == rows0  # no duplicate rows, bit-identical file
+    # explicit double-append of the same records also dedupes by cache key
+    save_db([record_from_row(r) for r in rows0], db, append=True)
+    assert len(load_db(db)) == len(rows0)
+
+
+def test_resume_false_reevaluates_and_refreshes_db(tmp_path):
+    db = str(tmp_path / "db.json")
+    calls = []
+    app = make_toy_app(calls)
+    sweep(app, GRID, repeats=1, db_path=db)
+    n0 = len(calls)
+    # stamp the stored rows so we can tell old from re-measured
+    rows = load_db(db)
+    for r in rows:
+        r["extra"] = {"stale": True}
+    with open(db, "w") as f:
+        json.dump(rows, f)
+    sweep(app, GRID, repeats=1, db_path=db, resume=False)
+    assert len(calls) == 2 * n0
+    refreshed = load_db(db)
+    assert len(refreshed) == len(GRID)  # replaced, not duplicated
+    assert all(r["extra"] == {} for r in refreshed)  # stale rows overwritten
+
+
+def test_v1_rows_without_spec_hash_are_cached(tmp_path):
+    """Schema v1 databases (no spec_hash field) resume correctly."""
+    db = str(tmp_path / "db.json")
+    app = make_toy_app()
+    sweep(app, GRID, repeats=1, db_path=db)
+    rows = load_db(db)
+    for r in rows:
+        del r["spec_hash"]
+    with open(db, "w") as f:
+        json.dump(rows, f)
+    calls = []
+    app2 = make_toy_app(calls)
+    sweep(app2, GRID, repeats=1, db_path=db)
+    assert len(calls) == 0
+
+
+def test_db_index_keys():
+    app = make_toy_app()
+    recs = sweep(app, GRID, repeats=1)
+    idx = db_index([r.to_json() for r in recs])
+    assert set(idx) == {("toy", spec_hash(s), "") for s in GRID}
+
+
+def test_same_app_different_workload_not_shared(tmp_path):
+    """The cache key includes the workload fingerprint: the same app name at
+    a different problem size must not be served another size's rows."""
+    db = str(tmp_path / "db.json")
+    calls_big, calls_small = [], []
+    big = make_toy_app(calls_big)
+    big.workload = {"n": 512}
+    small = make_toy_app(calls_small)
+    small.workload = {"n": 256}
+    sweep(big, GRID, repeats=1, db_path=db)
+    sweep(small, GRID, repeats=1, db_path=db)
+    assert len(calls_small) == len(GRID) + 1  # no cross-workload cache hits
+    # but the same workload IS shared
+    calls2 = []
+    small2 = make_toy_app(calls2)
+    small2.workload = {"n": 256}
+    sweep(small2, GRID, repeats=1, db_path=db)
+    assert len(calls2) == 0
+
+
+# ---------------------------------------------------------------- parallel
+
+def test_parallel_sweep_matches_serial():
+    app = make_toy_app()
+    serial = sweep(app, GRID, repeats=1, jobs=1)
+    parallel = sweep(app, GRID, repeats=1, jobs=4)
+    assert [r.to_json() for r in parallel] == [r.to_json() for r in serial]
+
+
+def test_batched_runner_is_used_and_matches_serial():
+    used = {"batches": 0}
+
+    base = make_toy_app()
+
+    def run_batch(specs):
+        used["batches"] += 1
+        return [base.run(s) for s in specs]
+
+    app = ApproxApp("toy", base.run, run_batch=run_batch)
+    serial = sweep(base, GRID, repeats=1, jobs=1)
+    batched = sweep(app, GRID, repeats=1, jobs=2)
+    assert used["batches"] == 2  # 4 specs in chunks of jobs=2
+    assert [r.to_json() for r in batched] == [r.to_json() for r in serial]
+
+
+def test_batched_runner_length_mismatch_raises():
+    base = make_toy_app()
+    app = ApproxApp("toy", base.run, run_batch=lambda specs: [])
+    with pytest.raises(ValueError):
+        sweep(app, GRID, repeats=1, jobs=2)
+
+
+def test_duplicate_specs_in_grid_evaluated_once():
+    calls = []
+    app = make_toy_app(calls)
+    recs = sweep(app, [taf_spec(0.5), taf_spec(0.5)], repeats=1)
+    assert len(calls) == 2  # one eval + exact, not two evals
+    assert len(recs) == 2 and recs[0].to_json() == recs[1].to_json()
+
+
+# ------------------------------------------------------------------ pareto
+
+def _rec(error, speedup, thresh=0.5):
+    return Record(app="toy", spec=spec_to_dict(taf_spec(thresh)), error=error,
+                  speedup=speedup, modeled_speedup=speedup,
+                  approx_fraction=0.0, wall_time_s=1.0, exact_time_s=1.0,
+                  extra={})
+
+
+def test_pareto_front_hand_built():
+    a = _rec(0.01, 1.2, 0.1)   # front: lowest error
+    b = _rec(0.05, 2.0, 0.2)   # front: pays error for speed
+    c = _rec(0.05, 1.5, 0.3)   # dominated by b (same error, slower)
+    d = _rec(0.10, 1.8, 0.4)   # dominated by b (more error, slower)
+    e = _rec(0.20, 3.0, 0.5)   # front: fastest
+    f = _rec(float("inf"), 9.0, 0.6)  # non-finite error: excluded
+    front = pareto_front([f, d, c, e, a, b])
+    assert front == [a, b, e]
+    assert dominates(b, c) and dominates(b, d)
+    assert not dominates(a, e) and not dominates(e, a)
+
+
+def test_pareto_front_on_dicts():
+    rows = [_rec(0.01, 1.2).to_json(), _rec(0.5, 9.0).to_json(),
+            _rec(0.01, 1.1).to_json()]
+    front = pareto_front(rows)
+    assert [(r["error"], r["speedup"]) for r in front] == [(0.01, 1.2),
+                                                           (0.5, 9.0)]
+
+
+def test_hypervolume():
+    # single point: rectangle (ref_e - e) * (s - ref_s)
+    assert hypervolume([_rec(0.2, 3.0)], ref_error=1.0) == \
+        pytest.approx(0.8 * 2.0)
+    # two-point staircase
+    hv = hypervolume([_rec(0.1, 2.0), _rec(0.5, 4.0)], ref_error=1.0)
+    assert hv == pytest.approx(0.9 * 1.0 + 0.5 * 2.0)
+    # points at/beyond the reference contribute nothing
+    assert hypervolume([_rec(2.0, 5.0), _rec(0.1, 0.5)], ref_error=1.0) == 0.0
+
+
+def test_propose_candidates_subdivides_brackets():
+    app = make_toy_app()
+    recs = sweep(app, [taf_spec(t) for t in (0.1, 0.9)], repeats=1)
+    cands = propose_candidates(recs)
+    assert cands, "front members must spawn neighborhood candidates"
+    values = {s.taf.rsd_threshold for s in cands if s.taf}
+    assert 0.5 in values  # midpoint of the (0.1, 0.9) bracket
+    hashes = {spec_hash(s) for s in cands}
+    assert spec_hash(taf_spec(0.1)) not in hashes  # measured points excluded
+
+
+def test_refine_respects_budget_and_caches(tmp_path):
+    db = str(tmp_path / "db.json")
+    calls = []
+    app = make_toy_app(calls)
+    coarse = sweep(app, GRID, repeats=1, db_path=db)
+    n0 = len(calls)
+    new = refine(app, coarse, budget=5, rounds=3, repeats=1, db_path=db)
+    assert 0 < len(new) <= 5
+    # every refined record was actually evaluated and persisted
+    idx = db_index(load_db(db))
+    assert all(("toy", r.spec_hash, "") in idx for r in new)
+    # refinement is resumable: a re-run never re-executes a spec that was
+    # already in the DB (cached candidates cost no budget, so the re-run may
+    # spend its budget pushing the frontier further instead)
+    n1 = len(calls)
+    assert n1 > n0
+    db_before = {r["spec_hash"] for r in load_db(db)}
+    new2 = refine(app, coarse, budget=5, rounds=3, repeats=1, db_path=db)
+    assert len(new2) <= 5
+    assert {r.spec_hash for r in new2}.isdisjoint({r.spec_hash for r in new})
+    executed2 = {spec_hash(s) for s in calls[n1:]
+                 if s.technique != Technique.NONE}
+    assert executed2.isdisjoint(db_before)

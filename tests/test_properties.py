@@ -1,7 +1,15 @@
-"""Property-based tests (hypothesis) for system invariants."""
+"""Property-based tests (hypothesis) for system invariants.
+
+`hypothesis` is an optional test dependency (see pyproject.toml
+``[project.optional-dependencies] test``); the module skips cleanly when it
+is not installed so the tier-1 suite still collects.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (IACTParams, Level, PerforationKind,
