@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ApproxSpec, Technique
+from repro.core import ApproxSpec, Technique, batching
 from repro.core.harness import AppResult, ApproxApp
 from repro.core import iact as iact_mod
 from repro.core import taf as taf_mod
@@ -87,6 +87,17 @@ def _jitted_runner(spec_key, n_elements, steps, tree_steps, seed):
     return fn, xs
 
 
+@lru_cache(maxsize=64)
+def _group_runner(key, n_elements, steps, tree_steps, seed):
+    """Batched-runner group evaluation (core/batching.py): one jitted vmap
+    over the group's stacked thresholds; the tree and table shapes are
+    static."""
+    xs = jnp.asarray(gen_inputs(n_elements, steps, seed))
+    seq = batching.sequence_runner(key, xs,
+                                   lambda x: binomial_price(x, tree_steps))
+    return jax.jit(jax.vmap(seq)) if seq is not None else None
+
+
 def make_app(n_elements: int = 64, steps: int = 32, tree_steps: int = 128,
              seed: int = 0) -> ApproxApp:
     def run(spec: ApproxSpec) -> AppResult:
@@ -104,6 +115,11 @@ def make_app(n_elements: int = 64, steps: int = 32, tree_steps: int = 128,
                          approx_fraction=frac,
                          flop_fraction=max(1.0 - frac, 1e-3))
 
+    run_batch = batching.make_run_batch(
+        run, lambda key: _group_runner(key, n_elements, steps, tree_steps,
+                                       seed))
+
     return ApproxApp(name="binomial_options", run=run, error_metric="mape",
+                     run_batch=run_batch,
                      workload=dict(n_elements=n_elements, steps=steps,
                                    tree_steps=tree_steps, seed=seed))

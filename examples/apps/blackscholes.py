@@ -17,11 +17,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ApproxSpec, Technique
+from repro.core import ApproxSpec, Technique, batching
 from repro.core.harness import AppResult, ApproxApp
 from repro.core import iact as iact_mod
 from repro.core import taf as taf_mod
-from repro.core.types import TAFParams
 
 
 def _phi(x):
@@ -83,17 +82,14 @@ _SPECS = {}
 
 
 @lru_cache(maxsize=64)
-def _batched_taf_runner(h_size, p_size, level, n_elements, steps, seed,
-                        volatility):
-    """One compiled sweep over a STACK of TAF thresholds: the structural
-    params (history/prediction sizes, level) are static, the threshold is a
-    vmapped traced scalar (see taf.run_sequence's rsd_threshold hook). This
-    is the batchable-runner protocol's stacked-spec fast path."""
+def _group_runner(key, n_elements, steps, seed, volatility):
+    """One compiled sweep over a STACK of traced scalars for a static-
+    structure group (see core/batching.py): TAF groups vmap over RSD
+    thresholds, iACT groups over distance thresholds; the structural params
+    (history/prediction sizes, table shape, level) stay static."""
     xs = jnp.asarray(gen_inputs(n_elements, steps, seed, volatility))
-    params = TAFParams(h_size, p_size, 0.0)  # threshold supplied per call
-    fn = jax.jit(jax.vmap(lambda th: taf_mod.run_sequence(
-        params, xs, bs_price, level, rsd_threshold=th)))
-    return fn, xs
+    seq = batching.sequence_runner(key, xs, bs_price)
+    return jax.jit(jax.vmap(seq)) if seq is not None else None
 
 
 def make_app(n_elements: int = 512, steps: int = 64,
@@ -113,40 +109,14 @@ def make_app(n_elements: int = 512, steps: int = 64,
                          approx_fraction=frac,
                          flop_fraction=max(1.0 - frac, 1e-3))
 
-    def run_batch(specs) -> list:
-        """ApproxApp.run_batch: TAF specs sharing (hSize, pSize, level) are
-        evaluated in one vmapped call over their thresholds; wall time is
-        the batch time amortized per spec. QoI/error/approx_fraction match
-        the serial path up to XLA fusion differences (~1e-7 relative).
-        Everything else falls back to run() per spec."""
-        results = [None] * len(specs)
-        groups = {}
-        for i, spec in enumerate(specs):
-            if spec.technique == Technique.TAF:
-                groups.setdefault(
-                    (spec.taf.history_size, spec.taf.prediction_size,
-                     spec.level), []).append(i)
-            else:
-                results[i] = run(spec)
-        for (h, p, level), idxs in groups.items():
-            fn, xs = _batched_taf_runner(h, p, level, n_elements, steps,
-                                         seed, volatility)
-            ths = jnp.asarray([specs[i].taf.rsd_threshold for i in idxs],
-                              jnp.float32)
-            out = fn(ths)  # compile + warmup
-            jax.block_until_ready(out[0])
-            t0 = time.perf_counter()
-            ys, _, fracs = fn(ths)
-            jax.block_until_ready(ys)
-            wall = (time.perf_counter() - t0) / len(idxs)
-            ys = np.asarray(ys)
-            fracs = np.asarray(fracs)
-            for j, i in enumerate(idxs):
-                frac = float(fracs[j])
-                results[i] = AppResult(qoi=ys[j], wall_time_s=wall,
-                                       approx_fraction=frac,
-                                       flop_fraction=max(1.0 - frac, 1e-3))
-        return results
+    # ApproxApp.run_batch: specs sharing static structure (TAF hSize/pSize,
+    # iACT tSize/tPerBlock, level) evaluate in one vmapped call over their
+    # stacked thresholds; batch wall time is amortized per spec.
+    # QoI/error/approx_fraction match the serial path up to XLA fusion
+    # differences (~1e-7 relative). Everything else runs serially.
+    run_batch = batching.make_run_batch(
+        run, lambda key: _group_runner(key, n_elements, steps, seed,
+                                       volatility))
 
     return ApproxApp(name="blackscholes", run=run, error_metric="mape",
                      run_batch=run_batch,

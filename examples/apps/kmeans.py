@@ -6,16 +6,25 @@ The paper's key finding (Figure 12c): approximation herds observations into
 stable clusters => EARLY CONVERGENCE; speedup correlates with convergence
 speedup (R^2 = 0.95). This app therefore reports iterations-to-converge for
 the exact and approximate runs in `extra`.
+
+Batched runner: the serial path is a host loop that breaks on convergence,
+which a vmapped evaluation cannot do -- lanes converge at different
+iterations. `_converging_scan` runs the same per-iteration step under
+``lax.scan`` with a frozen carry: once a lane's assignment repeats, its
+centers/state/assignment stop updating and its iteration count is pinned,
+reproducing the host loop's break semantics exactly (same assignments, same
+iters, same mean approx fraction).
 """
 from __future__ import annotations
 
 import time
+from functools import lru_cache
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ApproxSpec, Technique
+from repro.core import ApproxSpec, Technique, batching
 from repro.core.harness import AppResult, ApproxApp
 from repro.core import iact as iact_mod
 from repro.core import taf as taf_mod
@@ -34,32 +43,35 @@ def _assign_exact(pts, centers):
     return jnp.argmin(d2, axis=1)
 
 
-def run_kmeans(pts: np.ndarray, k: int, spec: ApproxSpec,
-               max_iters: int = 40):
-    """Lloyd's algorithm; the distance kernel output (min-distance centroid
-    index summary) is the approximated region, per element (observation)."""
-    n, dim = pts.shape
-    pts_j = jnp.asarray(pts)
+def _init_state(technique, params, n, d):
+    if technique == Technique.TAF:
+        return taf_mod.init(params, n, (), jnp.float32)
+    if technique == Technique.IACT:
+        n_tab = iact_mod.n_tables_for(params, n)
+        return iact_mod.init(params, n_tab, d, (), jnp.float32)
+    return None
 
-    state = None
-    if spec.technique == Technique.TAF:
-        state = taf_mod.init(spec.taf, n, (), jnp.float32)
-    elif spec.technique == Technique.IACT:
-        n_tab = iact_mod.n_tables_for(spec.iact, n)
-        state = iact_mod.init(spec.iact, n_tab, dim, (), jnp.float32)
 
-    @jax.jit
-    def step(centers, state):
-        if spec.technique == Technique.TAF:
+def _make_step(pts_j, k, technique, params, level):
+    """One Lloyd iteration: approximated assignment + centroid update.
+
+    The returned step(centers, state, th) takes the technique's traced
+    scalar `th` (None = use params' static value) -- shared by the serial
+    host loop and the vmapped batched runner.
+    """
+    n = pts_j.shape[0]
+
+    def step(centers, state, th=None):
+        if technique == Technique.TAF:
             out, new_state, mask = taf_mod.step(
                 state, lambda: _assign_exact(pts_j, centers).astype(
-                    jnp.float32), spec.taf, spec.level)
+                    jnp.float32), params, level, rsd_threshold=th)
             assign = out.astype(jnp.int32)
-        elif spec.technique == Technique.IACT:
+        elif technique == Technique.IACT:
             out, new_state, mask = iact_mod.step(
                 state, pts_j,
                 lambda x: _assign_exact(x, centers).astype(jnp.float32),
-                spec.iact, spec.level)
+                params, level, threshold=th)
             assign = out.astype(jnp.int32)
         else:
             assign = _assign_exact(pts_j, centers)
@@ -70,8 +82,33 @@ def run_kmeans(pts: np.ndarray, k: int, spec: ApproxSpec,
         return new_centers, assign, new_state, jnp.mean(
             mask.astype(jnp.float32))
 
+    return step
+
+
+def _spec_params(spec: ApproxSpec):
+    if spec.technique == Technique.TAF:
+        return spec.taf
+    if spec.technique == Technique.IACT:
+        return spec.iact
+    return None
+
+
+def _init_centers(pts, k):
     rng = np.random.RandomState(1)
-    centers = jnp.asarray(pts[rng.choice(n, k, replace=False)])
+    return jnp.asarray(pts[rng.choice(pts.shape[0], k, replace=False)])
+
+
+def run_kmeans(pts: np.ndarray, k: int, spec: ApproxSpec,
+               max_iters: int = 40):
+    """Lloyd's algorithm; the distance kernel output (min-distance centroid
+    index summary) is the approximated region, per element (observation)."""
+    n, dim = pts.shape
+    pts_j = jnp.asarray(pts)
+    params = _spec_params(spec)
+    state = _init_state(spec.technique, params, n, dim)
+    step = jax.jit(_make_step(pts_j, k, spec.technique, params, spec.level))
+
+    centers = _init_centers(pts, k)
     prev = None
     fracs = []
     iters = max_iters
@@ -87,17 +124,81 @@ def run_kmeans(pts: np.ndarray, k: int, spec: ApproxSpec,
         float(np.mean(fracs))
 
 
-def make_app(n: int = 2048, d: int = 8, k: int = 12,
-             seed: int = 0) -> ApproxApp:
+def _converging_scan(step, centers0, state0, n, max_iters):
+    """The host convergence loop as a scan with a frozen carry.
+
+    Returns a traced fn(th) -> (final_assign, mean_frac, {'iters': iters})
+    whose results match run_kmeans' break semantics lane-for-lane.
+    """
+    def one(th):
+        carry0 = (centers0, state0,
+                  jnp.zeros((n,), jnp.int32),    # prev assignment
+                  jnp.bool_(False),              # has_prev
+                  jnp.bool_(False),              # done (converged)
+                  jnp.int32(max_iters),          # iterations executed
+                  jnp.float32(0.0), jnp.int32(0))  # frac sum / count
+
+        def body(carry, t):
+            centers, state, prev, has_prev, done, iters, fsum, nexec = carry
+            new_centers, assign, new_state, frac = step(centers, state, th)
+            conv = has_prev & jnp.all(assign == prev)
+            take = ~done
+            freeze = lambda new, old: jnp.where(done, old, new)
+            centers = freeze(new_centers, centers)
+            state = jax.tree.map(freeze, new_state, state)
+            prev = jnp.where(done, prev, assign)
+            iters = jnp.where(take & conv, t + 1, iters)
+            fsum = fsum + jnp.where(take, frac, 0.0)
+            nexec = nexec + jnp.where(take, 1, 0)
+            return (centers, state, prev, has_prev | take, done | conv,
+                    iters, fsum, nexec), None
+
+        carry, _ = jax.lax.scan(body, carry0, jnp.arange(max_iters))
+        _, _, prev, _, _, iters, fsum, nexec = carry
+        frac = fsum / jnp.maximum(nexec, 1).astype(jnp.float32)
+        return prev, frac, {"iters": iters}
+
+    return one
+
+
+@lru_cache(maxsize=64)
+def _group_runner(key, n, d, k, seed, max_iters):
+    """Batched-runner group evaluation (core/batching.py): vmap the whole
+    converging Lloyd loop over a stack of thresholds."""
     pts, k = gen_data(n, d, k, seed)
+    tech, level = key[0], key[1]
+    if tech not in (Technique.TAF, Technique.IACT):
+        return None
+    params = batching.params_from_key(key)
+    pts_j = jnp.asarray(pts)
+    step = _make_step(pts_j, k, tech, params, level)
+    state0 = _init_state(tech, params, n, d)
+    one = _converging_scan(step, _init_centers(pts, k), state0, n, max_iters)
+    return jax.jit(jax.vmap(one))
+
+
+def make_app(n: int = 2048, d: int = 8, k: int = 12,
+             seed: int = 0, max_iters: int = 40) -> ApproxApp:
+    pts, k = gen_data(n, d, k, seed)
+
+    def _result(qoi, frac, iters, wall):
+        return AppResult(qoi=qoi, wall_time_s=wall, approx_fraction=frac,
+                         flop_fraction=max(iters / max_iters * (1 - frac),
+                                           1e-3),
+                         extra={"iters": iters})
 
     def run(spec: ApproxSpec) -> AppResult:
         t0 = time.perf_counter()
-        assign, iters, frac = run_kmeans(pts, k, spec)
+        assign, iters, frac = run_kmeans(pts, k, spec, max_iters)
         wall = time.perf_counter() - t0
-        return AppResult(qoi=assign, wall_time_s=wall, approx_fraction=frac,
-                         flop_fraction=max(iters / 40 * (1 - frac), 1e-3),
-                         extra={"iters": iters})
+        return _result(assign, frac, iters, wall)
+
+    run_batch = batching.make_run_batch(
+        run, lambda key: _group_runner(key, n, d, k, seed, max_iters),
+        result_builder=lambda qoi, frac, extra, wall: _result(
+            qoi, frac, int(extra.get("iters", max_iters)), wall))
 
     return ApproxApp(name="kmeans", run=run, error_metric="mcr",
-                     workload=dict(n=n, d=d, k=k, seed=seed))
+                     run_batch=run_batch,
+                     workload=dict(n=n, d=d, k=k, seed=seed,
+                                   max_iters=max_iters))

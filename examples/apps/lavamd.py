@@ -18,7 +18,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ApproxSpec, Technique
+from repro.core import ApproxSpec, Technique, batching
 from repro.core.harness import AppResult, ApproxApp
 from repro.core import iact as iact_mod
 from repro.core import taf as taf_mod
@@ -64,28 +64,11 @@ _SPECS = {}
 
 @lru_cache(maxsize=64)
 def _jitted_runner(spec_key, nx, seed):
-    pos_np, neigh_np = gen_boxes(nx, seed)
-    pos = jnp.asarray(pos_np)
-    neigh = jnp.asarray(neigh_np)
-    nb = pos.shape[0]
+    # the region: given flattened own+other positions per box, the force;
+    # invocation t = neighbor slot t (27 per box)
+    region, xs, nb = _region_setup(nx, seed)
     spec = _SPECS[spec_key]
 
-    # the region: given flattened own+other positions per box, the force
-    in_dim = PPB * 3 * 2
-
-    def region(x):
-        own = x[:, : PPB * 3].reshape(nb, PPB, 3)
-        other = x[:, PPB * 3:].reshape(nb, PPB, 3)
-        return pair_force(own, other).reshape(nb, PPB * 3)
-
-    def make_xs():
-        # invocation t = neighbor slot t (27 per box)
-        return jnp.concatenate([
-            jnp.broadcast_to(pos.reshape(1, nb, PPB * 3), (27, nb, PPB * 3)),
-            pos[neigh.T].reshape(27, nb, PPB * 3),
-        ], axis=-1)
-
-    xs = make_xs()
     if spec.technique == Technique.TAF:
         def total(xs):
             ys, st, frac = taf_mod.run_sequence(spec.taf, xs, region,
@@ -101,6 +84,41 @@ def _jitted_runner(spec_key, nx, seed):
             ys = jax.lax.map(region, xs)
             return jnp.sum(ys, axis=0).reshape(nb, PPB, 3), jnp.float32(0)
     return jax.jit(total), xs
+
+
+def _region_setup(nx, seed):
+    """Shared (region fn, invocation sequence, n_boxes) for both runners."""
+    pos_np, neigh_np = gen_boxes(nx, seed)
+    pos = jnp.asarray(pos_np)
+    neigh = jnp.asarray(neigh_np)
+    nb = pos.shape[0]
+
+    def region(x):
+        own = x[:, : PPB * 3].reshape(nb, PPB, 3)
+        other = x[:, PPB * 3:].reshape(nb, PPB, 3)
+        return pair_force(own, other).reshape(nb, PPB * 3)
+
+    xs = jnp.concatenate([
+        jnp.broadcast_to(pos.reshape(1, nb, PPB * 3), (27, nb, PPB * 3)),
+        pos[neigh.T].reshape(27, nb, PPB * 3),
+    ], axis=-1)
+    return region, xs, nb
+
+
+@lru_cache(maxsize=64)
+def _group_runner(key, nx, seed):
+    """Batched-runner group evaluation (core/batching.py): vmap the whole
+    neighbor-sequence force accumulation over a stack of thresholds."""
+    region, xs, nb = _region_setup(nx, seed)
+    seq = batching.sequence_runner(key, xs, region)
+    if seq is None:
+        return None
+
+    def total(th):
+        ys, frac = seq(th)
+        return jnp.sum(ys, axis=0).reshape(nb, PPB, 3), frac
+
+    return jax.jit(jax.vmap(total))
 
 
 def make_app(nx: int = 5, seed: int = 0) -> ApproxApp:
@@ -119,5 +137,9 @@ def make_app(nx: int = 5, seed: int = 0) -> ApproxApp:
                          approx_fraction=frac,
                          flop_fraction=max(1.0 - frac, 1e-3))
 
+    run_batch = batching.make_run_batch(
+        run, lambda key: _group_runner(key, nx, seed))
+
     return ApproxApp(name="lavamd", run=run, error_metric="mape",
+                     run_batch=run_batch,
                      workload=dict(nx=nx, seed=seed))

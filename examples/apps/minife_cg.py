@@ -7,19 +7,27 @@ and iACT inapplicable (non-uniform input sizes). This app reproduces that
 qualitative blow-up: perforating or TAF-memoizing the matvec corrupts the
 Krylov subspace and the residual diverges. QoI: final solution vector
 (equivalently the residual norm, in `extra`).
+
+The CG loop has a fixed trip count, so the whole solve is traceable: the
+batched runner vmaps it over a stack of traced scalars -- the TAF RSD
+threshold, or the perforation fraction (ini/fini/random kinds, whose
+execute-mask is computed in-trace via `perforation.traced_execute_mask`).
 """
 from __future__ import annotations
 
 import time
+from functools import lru_cache
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import ApproxSpec, Technique
+from repro.core import ApproxSpec, Technique, batching
 from repro.core.harness import AppResult, ApproxApp
-from repro.core.perforation import execute_mask
+from repro.core.perforation import execute_mask, traced_execute_mask
 from repro.core import taf as taf_mod
+
+NBLOCKS = 8  # row-blocks of the grid = TAF elements
 
 
 def poisson_matvec(x2d: jnp.ndarray) -> jnp.ndarray:
@@ -32,37 +40,47 @@ def poisson_matvec(x2d: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
-def cg_solve(b2d: jnp.ndarray, spec: ApproxSpec, iters: int = 60):
+def cg_solve(b2d: jnp.ndarray, spec: ApproxSpec, iters: int = 60,
+             rsd_threshold=None, fraction=None):
     """CG with an (optionally approximated) matvec. Row-block TAF: each of
     the grid's row-blocks is an element; a stable row-block's matvec output
     is memoized (exactly the paper's function-output memoization applied to
-    the sparse matvec)."""
+    the sparse matvec).
+
+    `rsd_threshold` (TAF) / `fraction` (ini/fini/random perforation) are the
+    traced-parameter hooks: possibly traced scalars overriding the spec's
+    static value, making the whole solve vmappable over a parameter stack.
+    Returns (x, residual_norm, mean_approx_fraction) -- traced values.
+    """
     n = b2d.shape[0]
-    nblocks = 8
-    rows = n // nblocks
+    rows = n // NBLOCKS
 
     taf_state = None
     if spec.technique == Technique.TAF:
-        taf_state = taf_mod.init(spec.taf, nblocks, (rows, n), jnp.float32)
+        taf_state = taf_mod.init(spec.taf, NBLOCKS, (rows, n), jnp.float32)
 
     perfo_mask = None
     if spec.technique == Technique.PERFORATION:
-        perfo_mask = jnp.asarray(
-            np.repeat(execute_mask(nblocks, spec.perforation), rows)
-        )[:, None]
+        if fraction is not None:
+            block_mask = traced_execute_mask(NBLOCKS, spec.perforation,
+                                             fraction)
+        else:
+            block_mask = jnp.asarray(execute_mask(NBLOCKS, spec.perforation))
+        perfo_mask = jnp.repeat(block_mask, rows)[:, None]
 
     def matvec(x2d, state):
         if spec.technique == Technique.TAF:
             def accurate():
-                return poisson_matvec(x2d).reshape(nblocks, rows, n)
+                return poisson_matvec(x2d).reshape(NBLOCKS, rows, n)
             out, new_state, mask = taf_mod.step(state, accurate, spec.taf,
-                                                spec.level)
+                                                spec.level,
+                                                rsd_threshold=rsd_threshold)
             return out.reshape(n, n), new_state, jnp.mean(
                 mask.astype(jnp.float32))
         y = poisson_matvec(x2d)
         if perfo_mask is not None:
             y = jnp.where(perfo_mask, y, 0.0)  # dropped rows contribute 0
-            return y, state, jnp.float32(1.0 - perfo_mask.mean())
+            return y, state, 1.0 - jnp.mean(perfo_mask.astype(jnp.float32))
         return y, state, jnp.float32(0)
 
     x = jnp.zeros_like(b2d)
@@ -80,24 +98,54 @@ def cg_solve(b2d: jnp.ndarray, spec: ApproxSpec, iters: int = 60):
         rs_new = jnp.sum(r * r)
         p = r + (rs_new / jnp.maximum(rs, 1e-30)) * p
         rs = rs_new
-    return x, jnp.sqrt(rs), float(np.mean([float(f) for f in fracs]))
+    return x, jnp.sqrt(rs), jnp.mean(jnp.stack(fracs))
 
 
-def make_app(n: int = 64, seed: int = 0) -> ApproxApp:
+def _gen_b(n: int, seed: int) -> jnp.ndarray:
     rng = np.random.RandomState(seed)
-    b = jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+    return jnp.asarray(rng.standard_normal((n, n)).astype(np.float32))
+
+
+@lru_cache(maxsize=64)
+def _group_runner(key, n, seed, iters):
+    """Batched-runner group evaluation (core/batching.py): vmap the whole
+    CG solve over a stack of RSD thresholds (TAF) or drop fractions
+    (fraction-kind perforation)."""
+    b = _gen_b(n, seed)
+    tech = key[0]
+    if tech == Technique.TAF:
+        spec = batching.spec_from_key(key)
+        one = lambda th: cg_solve(b, spec, iters, rsd_threshold=th)
+    elif tech == Technique.PERFORATION:
+        spec = batching.spec_from_key(key)
+        one = lambda fr: cg_solve(b, spec, iters, fraction=fr)
+    else:
+        return None
+
+    def run_one(scalar):
+        x, res, frac = one(scalar)
+        return x, frac, {"residual": res}
+
+    return jax.jit(jax.vmap(run_one))
+
+
+def make_app(n: int = 64, seed: int = 0, iters: int = 60) -> ApproxApp:
+    b = _gen_b(n, seed)
 
     def run(spec: ApproxSpec) -> AppResult:
         t0 = time.perf_counter()
-        x, res, frac = jax.block_until_ready(
-            cg_solve(b, spec)[0]), None, None
-        # re-run to fetch residual/frac (cheap; sizes are small)
-        x2, res, frac = cg_solve(b, spec)
+        x, res, frac = cg_solve(b, spec, iters)
+        jax.block_until_ready(x)
         wall = time.perf_counter() - t0
-        return AppResult(qoi=np.asarray(x2), wall_time_s=wall,
+        frac = float(frac)
+        return AppResult(qoi=np.asarray(x), wall_time_s=wall,
                          approx_fraction=frac,
                          flop_fraction=max(1.0 - frac, 1e-3),
                          extra={"residual": float(res)})
 
+    run_batch = batching.make_run_batch(
+        run, lambda key: _group_runner(key, n, seed, iters))
+
     return ApproxApp(name="minife_cg", run=run, error_metric="mape",
-                     workload=dict(n=n, seed=seed))
+                     run_batch=run_batch,
+                     workload=dict(n=n, seed=seed, iters=iters))

@@ -11,17 +11,20 @@ Public surface:
   hierarchy    -- element/tile/block majority-rules voting
   harness      -- the DSE execution harness + error metrics (MAPE, MCR):
                   resumable keyed-cache sweeps, parallel/batched evaluation
+  batching     -- the batched-runner protocol: group specs by static
+                  structure, vmap one compiled evaluation over the stacked
+                  traced scalars
   pareto       -- error/speedup Pareto front + front-guided refinement
 """
-from . import (approx, autotune, harness, hierarchy, iact, pareto,
+from . import (approx, autotune, batching, harness, hierarchy, iact, pareto,
                perforation, rsd, taf, types)
 from .approx import ApproxRegion, perforated_loop
 from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
                     PerforationParams, TAFParams, Technique, parse_pragma)
 
 __all__ = [
-    "approx", "autotune", "harness", "hierarchy", "iact", "pareto",
-    "perforation", "rsd", "taf",
+    "approx", "autotune", "batching", "harness", "hierarchy", "iact",
+    "pareto", "perforation", "rsd", "taf",
     "types", "ApproxRegion", "perforated_loop", "ApproxSpec", "IACTParams",
     "Level", "PerforationKind", "PerforationParams", "TAFParams", "Technique",
     "parse_pragma",

@@ -63,37 +63,62 @@ class ApproxRegion:
                                  self.out_shape, self.out_dtype)
         return ()
 
-    def step(self, state, x: Optional[jnp.ndarray] = None):
-        """Functional single-invocation step -> (out, new_state, approx_mask)."""
+    def _check_hooks(self, rsd_threshold, threshold):
+        """Traced-parameter hooks are technique-specific: passing one the
+        technique cannot honor is a spec bug, not a silent no-op."""
+        t = self.spec.technique
+        if rsd_threshold is not None and t != Technique.TAF:
+            raise ValueError(
+                f"rsd_threshold is a TAF hook; region technique is {t}")
+        if threshold is not None and t != Technique.IACT:
+            raise ValueError(
+                f"threshold is an iACT hook; region technique is {t}")
+
+    def step(self, state, x: Optional[jnp.ndarray] = None, *,
+             rsd_threshold=None, threshold=None):
+        """Functional single-invocation step -> (out, new_state, approx_mask).
+
+        `rsd_threshold` (TAF) / `threshold` (iACT) are the traced-parameter
+        hooks -- possibly traced scalars overriding the spec's static value,
+        which is how a region participates in a vmapped batched sweep.
+        Passing a hook the technique doesn't support raises ValueError.
+        """
+        self._check_hooks(rsd_threshold, threshold)
         t = self.spec.technique
         if t == Technique.TAF:
             thunk = (lambda: self.fn(x)) if x is not None else self.fn
             return taf_mod.step(state, thunk, self.spec.taf, self.spec.level,
-                                tile_size=self.tile_size)
+                                tile_size=self.tile_size,
+                                rsd_threshold=rsd_threshold)
         if t == Technique.IACT:
             return iact_mod.step(state, x, self.fn, self.spec.iact,
-                                 self.spec.level, tile_size=self.tile_size)
+                                 self.spec.level, tile_size=self.tile_size,
+                                 threshold=threshold)
         if t == Technique.NONE:
             y = self.fn(x) if x is not None else self.fn()
             return y, state, jnp.zeros((self.n_elements,), bool)
         raise ValueError(f"ApproxRegion.step does not handle {t}; use "
                          "perforated_loop for perforation")
 
-    def run(self, xs: jnp.ndarray):
+    def run(self, xs: jnp.ndarray, *, rsd_threshold=None, threshold=None):
         """Run a whole invocation sequence (T, N, ...) under scan.
 
+        Accepts the same traced-parameter hooks as `step`.
         Returns (outputs, approx_fraction).
         """
+        self._check_hooks(rsd_threshold, threshold)
         t = self.spec.technique
         if t == Technique.TAF:
             ys, _, frac = taf_mod.run_sequence(self.spec.taf, xs, self.fn,
                                                self.spec.level,
-                                               tile_size=self.tile_size)
+                                               tile_size=self.tile_size,
+                                               rsd_threshold=rsd_threshold)
             return ys, frac
         if t == Technique.IACT:
             ys, _, frac = iact_mod.run_sequence(self.spec.iact, xs, self.fn,
                                                 self.spec.level,
-                                                tile_size=self.tile_size)
+                                                tile_size=self.tile_size,
+                                                threshold=threshold)
             return ys, frac
         if t == Technique.NONE:
             ys = jax.lax.map(self.fn, xs)
@@ -103,19 +128,42 @@ class ApproxRegion:
 
 def perforated_loop(spec: ApproxSpec, n_iters: int,
                     body: Callable[[int, object], object], carry,
-                    herded_structural: bool = True):
+                    herded_structural: bool = True, fraction=None):
     """`for i in range(n): carry = body(i, carry)` with loop perforation.
 
     With herded perforation (spec.perforation.herded) the kept-iteration set
     is static, so the loop is *structurally* shortened (fori over the kept
     subset): iterations are genuinely not executed -- the paper's uniform
     control flow payoff. Returns (carry, executed_fraction).
+
+    `fraction` is the traced-parameter hook: a (possibly traced) scalar
+    overriding spec.perforation.fraction for the fraction-driven kinds
+    (ini/fini/random). A traced fraction cannot shorten the loop
+    structurally, so this path is the MASKED, non-herded variant: every
+    iteration runs and the execute-mask (computed in-trace from the
+    fraction) gates the body -- which is exactly what lets a batched runner
+    vmap one compiled loop over a stack of fractions. The executed fraction
+    is then a traced scalar too.
     """
     if spec.technique != Technique.PERFORATION:
+        if fraction is not None:
+            raise ValueError(
+                f"fraction is a perforation hook; spec technique is "
+                f"{spec.technique} (a hook the technique cannot honor is a "
+                "spec bug, not a silent no-op)")
         for_all = jax.lax.fori_loop(
             0, n_iters, lambda i, c: body(i, c), carry)
         return for_all, 1.0
     p = spec.perforation
+    if fraction is not None:
+        mask_arr = perfo_mod.traced_execute_mask(n_iters, p, fraction)
+
+        def traced_masked_body(i, c):
+            return jax.lax.cond(mask_arr[i], lambda cc: body(i, cc),
+                                lambda cc: cc, c)
+
+        out = jax.lax.fori_loop(0, n_iters, traced_masked_body, carry)
+        return out, jnp.mean(mask_arr.astype(jnp.float32))
     keep = perfo_mod.kept_indices(n_iters, p)
     if herded_structural and p.herded:
         keep_arr = jnp.asarray(keep, jnp.int32)

@@ -1,0 +1,224 @@
+"""The batched-runner protocol: one compiled evaluation per spec *group*.
+
+The paper's harness "exhaustively explores the space of user-provided
+approximation techniques and parameters" (section 2.3); on this substrate
+the dominant sweep cost is one XLA compile + dispatch per spec. But most of
+a Table-2 grid varies only a *scalar* knob (the TAF RSD threshold, the iACT
+distance threshold, the perforation fraction) while the structural
+parameters -- which shape the technique state and therefore the compiled
+program -- stay fixed. Those scalars are traced-parameter hooks
+(`taf.run_sequence(rsd_threshold=...)`, `iact.run_sequence(threshold=...)`,
+`perforated_loop(fraction=...)`), so a whole group of specs sharing their
+static structure evaluates as ONE compiled `jax.vmap` over the stacked
+scalars.
+
+This module is the reusable middle layer between `harness.run_specs` (which
+calls `ApproxApp.run_batch` in chunks of `jobs`) and the apps:
+
+  static_key(spec)   -- hashable (technique, level, structural-params) key;
+                        None when the spec has no traced scalar (e.g.
+                        skip-driven perforation) and must run serially.
+  traced_param(spec) -- the spec's traced scalar.
+  group_specs(specs) -- indices grouped by static_key + the serial leftovers.
+  make_run_batch(..) -- assembles an `ApproxApp.run_batch` from an app's
+                        `make_group_fn(key) -> fn(stacked_params)` factory.
+
+An app's `make_group_fn(key)` returns a compiled callable mapping a (B,)
+array of traced scalars to `(qoi_stack, frac_stack)` (optionally a third
+dict of stacked per-spec extras), or None to decline the group (serial
+fallback). Apps cache the compiled callable per key (`functools.lru_cache`)
+so resumed or densified sweeps recompile nothing.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from . import iact as iact_mod
+from . import taf as taf_mod
+from .harness import AppResult
+from .types import (ApproxSpec, IACTParams, PerforationKind,
+                    PerforationParams, TAFParams, Technique)
+
+# Perforation kinds whose knob is the (traceable) fraction; skip-driven
+# kinds are purely structural and cannot share a compiled program.
+FRACTION_KINDS = (PerforationKind.INI, PerforationKind.FINI,
+                  PerforationKind.RANDOM)
+
+
+def static_key(spec: ApproxSpec) -> Optional[Tuple]:
+    """Hashable static-structure key, or None when the spec has no traced
+    scalar and must be evaluated serially.
+
+    Two specs with the same key differ ONLY in their traced parameter, so
+    they can share one compiled (vmapped) evaluation.
+    """
+    if spec.technique == Technique.TAF:
+        return (Technique.TAF, spec.level, spec.taf.history_size,
+                spec.taf.prediction_size)
+    if spec.technique == Technique.IACT:
+        return (Technique.IACT, spec.level, spec.iact.table_size,
+                spec.iact.tables_per_block)
+    if spec.technique == Technique.PERFORATION:
+        p = spec.perforation
+        if p.kind in FRACTION_KINDS:
+            return (Technique.PERFORATION, spec.level, p.kind, p.herded,
+                    p.seed)
+        return None  # small/large: `skip` is structural, nothing to stack
+    return None
+
+
+def params_from_key(key: Tuple):
+    """Reconstruct a static key's technique params, traced scalar zeroed
+    (it is supplied per vmap lane). The single inverse of `static_key`, so
+    apps never index into the key tuple themselves."""
+    tech = key[0]
+    if tech == Technique.TAF:
+        return TAFParams(key[2], key[3], 0.0)
+    if tech == Technique.IACT:
+        return IACTParams(key[2], 0.0, key[3])
+    if tech == Technique.PERFORATION:
+        return PerforationParams(kind=key[2], herded=key[3], seed=key[4])
+    raise ValueError(f"not a batchable static key: {key}")
+
+
+def spec_from_key(key: Tuple) -> ApproxSpec:
+    """The static key as an ApproxSpec (traced scalar zeroed)."""
+    tech, level = key[0], key[1]
+    p = params_from_key(key)
+    return ApproxSpec(tech, level,
+                      taf=p if tech == Technique.TAF else None,
+                      iact=p if tech == Technique.IACT else None,
+                      perforation=p if tech == Technique.PERFORATION
+                      else None)
+
+
+def sequence_runner(key: Tuple, xs, fn):
+    """`lambda th -> (ys, approx_fraction)` over the technique's
+    run_sequence with the key's static params and `th` as the traced
+    scalar -- the shared body of the memoization apps' group runners.
+    Returns None for keys with no run_sequence shape (perforation)."""
+    tech, level = key[0], key[1]
+    params = params_from_key(key)
+    if tech == Technique.TAF:
+        def run(th):
+            ys, _, frac = taf_mod.run_sequence(params, xs, fn, level,
+                                               rsd_threshold=th)
+            return ys, frac
+        return run
+    if tech == Technique.IACT:
+        def run(th):
+            ys, _, frac = iact_mod.run_sequence(params, xs, fn, level,
+                                                threshold=th)
+            return ys, frac
+        return run
+    return None
+
+
+def traced_param(spec: ApproxSpec) -> float:
+    """The spec's traced scalar (the parameter a batched runner stacks)."""
+    if spec.technique == Technique.TAF:
+        return float(spec.taf.rsd_threshold)
+    if spec.technique == Technique.IACT:
+        return float(spec.iact.threshold)
+    if spec.technique == Technique.PERFORATION and \
+            spec.perforation.kind in FRACTION_KINDS:
+        return float(spec.perforation.fraction)
+    raise ValueError(f"spec {spec} has no traced parameter")
+
+
+def group_specs(specs: Sequence[ApproxSpec], min_group: int = 2
+                ) -> Tuple[Dict[Tuple, List[int]], List[int]]:
+    """Partition spec indices into vmappable groups and serial leftovers.
+
+    Groups smaller than `min_group` are demoted to the serial list: a
+    one-lane vmap amortizes nothing but still costs a fresh compile.
+    """
+    groups: Dict[Tuple, List[int]] = {}
+    serial: List[int] = []
+    for i, spec in enumerate(specs):
+        key = static_key(spec)
+        if key is None:
+            serial.append(i)
+        else:
+            groups.setdefault(key, []).append(i)
+    for key in [k for k, idxs in groups.items() if len(idxs) < min_group]:
+        serial.extend(groups.pop(key))
+    return groups, sorted(serial)
+
+
+def _default_result(qoi: np.ndarray, frac: float, extra: Dict,
+                    wall: float) -> AppResult:
+    return AppResult(qoi=qoi, wall_time_s=wall, approx_fraction=frac,
+                     flop_fraction=max(1.0 - frac, 1e-3), extra=extra)
+
+
+def _per_spec_extra(extras: Dict[str, np.ndarray], j: int) -> Dict:
+    out = {}
+    for k, v in extras.items():
+        vj = np.asarray(v)[j]
+        out[k] = vj.item() if np.ndim(vj) == 0 else vj
+    return out
+
+
+def run_batch_grouped(
+        specs: Sequence[ApproxSpec],
+        run_one: Callable[[ApproxSpec], AppResult],
+        make_group_fn: Callable[[Tuple], Optional[Callable]],
+        result_builder: Callable[..., AppResult] = _default_result,
+        min_group: int = 2) -> List[AppResult]:
+    """Evaluate `specs`, vmapping each static-structure group in one
+    compiled call and falling back to `run_one` for the rest.
+
+    Per group: `fn = make_group_fn(key)` is called twice on the stacked
+    traced parameters -- once to compile + warm up, once timed -- and the
+    batch wall time is amortized per spec (the same best-effort statistic
+    the serial apps report after their own warmup call). `fn` returns
+    `(qoi_stack, frac_stack)` or `(qoi_stack, frac_stack, extras_dict)`
+    with every stack's leading dim == len(group).
+    """
+    results: List[Optional[AppResult]] = [None] * len(specs)
+    groups, serial = group_specs(specs, min_group=min_group)
+    for i in serial:
+        results[i] = run_one(specs[i])
+    for key, idxs in groups.items():
+        fn = make_group_fn(key)
+        if fn is None:
+            for i in idxs:
+                results[i] = run_one(specs[i])
+            continue
+        params = jnp.asarray([traced_param(specs[i]) for i in idxs],
+                             jnp.float32)
+        out = fn(params)  # compile + warmup
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = fn(params)
+        jax.block_until_ready(out)
+        wall = (time.perf_counter() - t0) / len(idxs)
+        qois, fracs = out[0], out[1]
+        extras = out[2] if len(out) > 2 else {}
+        qois = np.asarray(qois)
+        fracs = np.asarray(fracs)
+        if qois.shape[0] != len(idxs) or fracs.shape[0] != len(idxs):
+            raise ValueError(
+                f"group runner for {key} returned leading dim "
+                f"{qois.shape[0]}/{fracs.shape[0]} for {len(idxs)} specs")
+        for j, i in enumerate(idxs):
+            results[i] = result_builder(qois[j], float(fracs[j]),
+                                        _per_spec_extra(extras, j), wall)
+    return results
+
+
+def make_run_batch(run_one, make_group_fn,
+                   result_builder: Callable[..., AppResult] = _default_result,
+                   min_group: int = 2):
+    """Build an `ApproxApp.run_batch` from an app's group-runner factory."""
+    def run_batch(specs: Sequence[ApproxSpec]) -> List[AppResult]:
+        return run_batch_grouped(specs, run_one, make_group_fn,
+                                 result_builder=result_builder,
+                                 min_group=min_group)
+    return run_batch

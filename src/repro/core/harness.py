@@ -32,6 +32,7 @@ import itertools
 import json
 import os
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
                     Tuple, Union)
@@ -235,16 +236,42 @@ def _make_record(app: ApproxApp, spec: ApproxSpec, res: AppResult,
     )
 
 
+# apps whose run_batch already triggered the serial-fallback warning (one
+# warning per app per process, not one per chunk)
+_WARNED_BATCH_FALLBACK: set = set()
+
+
 def _run_batched(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int,
                  batch_size: int) -> List[AppResult]:
     """Batched-runner path: chunk specs and take the per-spec best of N
-    batch invocations (same best-of-N statistic as _timed)."""
+    batch invocations (same best-of-N statistic as _timed).
+
+    A chunk whose run_batch raises falls back to the serial path, per spec,
+    with the FULL repeat count: batch-amortized and serial wall times are
+    not comparable best-of-N candidates, so partial batch repeats are
+    discarded rather than mixed in, and one bad batch cannot abort a sweep.
+    Protocol violations (wrong result count) still raise -- that is an app
+    bug, not a transient evaluation failure.
+    """
     out: List[AppResult] = []
     for lo in range(0, len(specs), max(1, batch_size)):
         chunk = list(specs[lo:lo + max(1, batch_size)])
         best: List[Optional[AppResult]] = [None] * len(chunk)
+        failed = False
         for _ in range(max(1, repeats)):
-            results = app.run_batch(chunk)
+            try:
+                results = app.run_batch(chunk)
+            except Exception as e:
+                if app.name not in _WARNED_BATCH_FALLBACK:
+                    _WARNED_BATCH_FALLBACK.add(app.name)
+                    warnings.warn(
+                        f"{app.name}.run_batch failed ({type(e).__name__}: "
+                        f"{e}); falling back to the serial path for the "
+                        "affected chunks. A deterministic failure here "
+                        "silently costs the batched speedup -- fix the "
+                        "app's group runner.")
+                failed = True
+                break
             if len(results) != len(chunk):
                 raise ValueError(
                     f"{app.name}.run_batch returned {len(results)} results "
@@ -252,6 +279,8 @@ def _run_batched(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int,
             for i, r in enumerate(results):
                 if best[i] is None or r.wall_time_s < best[i].wall_time_s:
                     best[i] = r
+        if failed:
+            best = [_timed(lambda s=s: app.run(s), repeats) for s in chunk]
         out.extend(best)
     return out
 

@@ -60,11 +60,19 @@ def n_tables_for(params: IACTParams, n_elements: int) -> int:
     return max(1, min(n_elements, params.tables_per_block))
 
 
-def _read_phase(state: IACTState, x: jnp.ndarray, params: IACTParams):
+def _read_phase(state: IACTState, x: jnp.ndarray, params: IACTParams,
+                threshold=None):
     """All elements probe their table. x: (T, G, in_dim) grouped inputs.
+
+    `threshold` overrides params.threshold; it may be a traced scalar, which
+    is what lets a batched runner `jax.vmap` one compiled sweep over a stack
+    of activation thresholds (table_size / tables_per_block stay static --
+    they shape the state).
 
     Returns (hit (T,G), best_value (T,G,*out), min_dist (T,G)).
     """
+    if threshold is None:
+        threshold = params.threshold
     # distances: (T, G, S)
     diff = x[:, :, None, :] - state.keys[:, None, :, :]
     dist = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
@@ -74,7 +82,7 @@ def _read_phase(state: IACTState, x: jnp.ndarray, params: IACTParams):
     best_value = jnp.take_along_axis(
         state.values, best.reshape(best.shape + (1,) * (state.values.ndim - 2)),
         axis=1)
-    hit = min_dist < params.threshold
+    hit = min_dist < threshold
     return hit, best_value, min_dist
 
 
@@ -107,12 +115,16 @@ def _write_phase(state: IACTState, x: jnp.ndarray, y: jnp.ndarray,
 def step(state: IACTState, x: jnp.ndarray,
          accurate_fn: Callable[[jnp.ndarray], jnp.ndarray],
          params: IACTParams, level: Level = Level.ELEMENT,
-         tile_size: Optional[int] = None):
+         tile_size: Optional[int] = None,
+         threshold=None):
     """One invocation over all
 
     elements. x: (N, in_dim); accurate_fn: (N, in_dim) -> (N, *out).
     Elements are grouped contiguously onto tables: group g = elements
     [g*G, (g+1)*G) where G = N / n_tables.
+
+    `threshold` (optional, possibly traced) overrides params.threshold --
+    the batched-runner hook (see _read_phase).
 
     Returns (outputs (N, *out), new_state, approx_mask (N,)).
     """
@@ -123,7 +135,8 @@ def step(state: IACTState, x: jnp.ndarray,
     G = N // T
     xg = x.reshape(T, G, -1).astype(jnp.float32)
 
-    hit, best_value, min_dist = _read_phase(state, xg, params)
+    hit, best_value, min_dist = _read_phase(state, xg, params,
+                                            threshold=threshold)
     approx_mask = hierarchy.vote(hit.reshape(-1), level, tile_size=tile_size)
     approx_g = approx_mask.reshape(T, G)
 
@@ -163,8 +176,13 @@ def step(state: IACTState, x: jnp.ndarray,
 def run_sequence(params: IACTParams, xs: jnp.ndarray,
                  fn: Callable[[jnp.ndarray], jnp.ndarray],
                  level: Level = Level.ELEMENT,
-                 tile_size: Optional[int] = None):
+                 tile_size: Optional[int] = None,
+                 threshold=None):
     """Scan `step` over invocations xs: (T_steps, N, in_dim).
+
+    `threshold` (optional, possibly traced) overrides params.threshold --
+    the hook the harness's batched runners use to vmap one compiled sweep
+    over a stack of thresholds (the structural table params stay static).
 
     Returns (outputs, final_state, approx_fraction).
     """
@@ -175,7 +193,7 @@ def run_sequence(params: IACTParams, xs: jnp.ndarray,
 
     def body(state, x_t):
         out, new_state, mask = step(state, x_t, fn, params, level,
-                                    tile_size=tile_size)
+                                    tile_size=tile_size, threshold=threshold)
         return new_state, (out, mask)
 
     final, (ys, masks) = jax.lax.scan(body, state0, xs)

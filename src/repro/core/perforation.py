@@ -25,9 +25,20 @@ import jax.numpy as jnp
 from .types import PerforationKind, PerforationParams
 
 
+def _n_dropped(fraction, n_iters: int) -> int:
+    """floor(fraction * n_iters) in float32 -- the substrate's compute
+    dtype, and what keeps the static mask bit-identical to
+    `traced_execute_mask` (whose fraction arrives as a traced float32)."""
+    return int(np.floor(np.float32(fraction) * np.float32(n_iters)))
+
+
 def execute_mask(n_iters: int, params: PerforationParams) -> np.ndarray:
     """Static (host-side) bool mask, True = execute iteration. Herded view:
-    identical for every element, hence a single 1-D mask."""
+    identical for every element, hence a single 1-D mask.
+
+    Fraction comparisons are performed in float32 to match
+    `traced_execute_mask` exactly (the batched path stacks fractions as
+    float32 lanes)."""
     i = np.arange(n_iters)
     k = params.kind
     if k == PerforationKind.SMALL:
@@ -35,15 +46,45 @@ def execute_mask(n_iters: int, params: PerforationParams) -> np.ndarray:
     elif k == PerforationKind.LARGE:
         mask = (i % params.skip) == 0
     elif k == PerforationKind.INI:
-        mask = i >= int(np.floor(params.fraction * n_iters))
+        mask = i >= _n_dropped(params.fraction, n_iters)
     elif k == PerforationKind.FINI:
-        mask = i < (n_iters - int(np.floor(params.fraction * n_iters)))
+        mask = i < (n_iters - _n_dropped(params.fraction, n_iters))
     elif k == PerforationKind.RANDOM:
         rng = np.random.RandomState(params.seed)
-        mask = rng.uniform(size=n_iters) >= params.fraction
+        mask = rng.uniform(size=n_iters).astype(np.float32) >= \
+            np.float32(params.fraction)
     else:
         raise ValueError(f"unknown perforation kind {k}")
     return mask
+
+
+def traced_execute_mask(n_iters: int, params: PerforationParams,
+                        fraction=None) -> jnp.ndarray:
+    """Execute-mask as a jnp array whose `fraction` may be a TRACED scalar.
+
+    Only the fraction-driven kinds (ini/fini/random) admit a traced
+    parameter -- skip-driven kinds (small/large) are purely structural.
+    Matches `execute_mask` exactly when `fraction == params.fraction`
+    (both compute the fraction comparisons in float32), so a batched
+    (vmapped-over-fractions) evaluation reproduces the static path's
+    results lane for lane.
+    """
+    if fraction is None:
+        fraction = params.fraction
+    fraction = jnp.asarray(fraction, jnp.float32)
+    i = jnp.arange(n_iters)
+    k = params.kind
+    if k == PerforationKind.INI:
+        return i >= jnp.floor(fraction * n_iters)
+    if k == PerforationKind.FINI:
+        return i < n_iters - jnp.floor(fraction * n_iters)
+    if k == PerforationKind.RANDOM:
+        u = jnp.asarray(
+            np.random.RandomState(params.seed).uniform(size=n_iters),
+            jnp.float32)
+        return u >= fraction
+    raise ValueError(
+        f"perforation kind {k} has no traced fraction (skip is structural)")
 
 
 def kept_indices(n_iters: int, params: PerforationParams) -> np.ndarray:

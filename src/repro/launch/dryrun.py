@@ -29,6 +29,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import SHAPES, get_config, list_archs, shape_applicable
 from repro.launch import specs as specs_mod
 from repro.launch import steps as steps_mod
@@ -135,7 +136,7 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     coll = hlo_mod.collective_stats(compiled.as_text())
     n = cfg.param_count()
     n_active = cfg.active_param_count()

@@ -67,6 +67,7 @@ def main():
     ap.add_argument("--top", type=int, default=12)
     args = ap.parse_args()
 
+    from repro import compat
     from repro.configs import SHAPES, get_config
     from repro.launch import specs as specs_mod
     from repro.launch import steps as steps_mod
@@ -132,7 +133,7 @@ def main():
                                    jax.ShapeDtypeStruct((), jnp.int32)
                                ).compile()
 
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     text = compiled.as_text()
     print(f"== {args.arch} / {args.shape} (unrolled depth {cfg.n_layers}) ==")
     print(f"flops/dev: {cost.get('flops', 0):.4g}   "

@@ -31,6 +31,7 @@ from typing import Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs import SHAPES, get_config, shape_applicable
 from repro.configs.base import ModelConfig
 from repro.launch import specs as specs_mod
@@ -130,7 +131,7 @@ def _cost_of(cfg: ModelConfig, shape_name: str, mesh) -> Cost:
                                   params_sds, cache_sds, tok_sds,
                                   jax.ShapeDtypeStruct((), jnp.int32))
         compiled = lowered.compile()
-    cost = compiled.cost_analysis() or {}
+    cost = compat.cost_analysis(compiled)
     text = compiled.as_text()
     coll = hlo_mod.collective_stats(text)
     raw_bytes = float(cost.get("bytes accessed", 0.0))

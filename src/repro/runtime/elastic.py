@@ -16,6 +16,8 @@ from typing import Optional, Sequence, Tuple
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def best_mesh_shape(n_devices: int, model_parallel: int = 16,
                     min_model: int = 1) -> Tuple[int, int]:
@@ -33,10 +35,7 @@ def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 16,
     devs = jax.devices()
     n = n_devices if n_devices is not None else len(devs)
     data, mp = best_mesh_shape(n, model_parallel)
-    return jax.make_mesh(
-        (data, mp), tuple(axis_names),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-        devices=devs[: data * mp])
+    return make_mesh((data, mp), axis_names, devices=devs[: data * mp])
 
 
 def accum_steps_for(global_batch: int, per_device_batch: int,

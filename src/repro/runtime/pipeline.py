@@ -22,10 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-try:  # newer jax exports shard_map at top level
-    from jax import shard_map
-except ImportError:  # e.g. jax 0.4.x: experimental home
-    from jax.experimental.shard_map import shard_map
+from repro.compat import shard_map
 
 PyTree = Any
 
@@ -91,5 +88,5 @@ def pipeline_apply(layer_fn: Callable, params_stacked: PyTree, x: jnp.ndarray,
 
     fn = shard_map(stage_program, mesh=mesh,
                    in_specs=(param_specs, P()),
-                   out_specs=P(), check_vma=False)
+                   out_specs=P(), check_replication=False)
     return fn(params_stacked, x)

@@ -196,3 +196,95 @@ class TestRSD:
         x = jnp.asarray([1.0, 2.0, 3.0])
         expected = float(np.std([1, 2, 3]) / np.mean([1, 2, 3]))
         np.testing.assert_allclose(float(rsd(x)), expected, rtol=1e-6)
+
+
+class TestTracedHooks:
+    """The traced-parameter hooks behind the batched-runner protocol:
+    a traced scalar must reproduce the static parameter's results exactly
+    and be vmappable over a parameter stack."""
+
+    def test_iact_traced_threshold_matches_static(self):
+        params = IACTParams(table_size=2, threshold=0.5, tables_per_block=4)
+        rng = np.random.RandomState(0)
+        xs = jnp.asarray(rng.standard_normal((5, 8, 3)).astype(np.float32))
+        fn = lambda x: jnp.sum(x * x, axis=-1)
+        ys_s, _, fr_s = iact.run_sequence(params, xs, fn)
+        ys_t, _, fr_t = jax.jit(
+            lambda th: iact.run_sequence(params, xs, fn, threshold=th)
+        )(jnp.float32(0.5))
+        np.testing.assert_allclose(np.asarray(ys_s), np.asarray(ys_t))
+        assert float(fr_s) == float(fr_t)
+
+    def test_iact_threshold_vmaps(self):
+        params = IACTParams(table_size=2, threshold=0.5, tables_per_block=4)
+        rng = np.random.RandomState(0)
+        xs = jnp.asarray(rng.standard_normal((6, 8, 3)).astype(np.float32))
+        fn = lambda x: jnp.sum(x * x, axis=-1)
+        vb = jax.jit(jax.vmap(
+            lambda th: iact.run_sequence(params, xs, fn, threshold=th)[2]))
+        fracs = np.asarray(vb(jnp.asarray([0.0, 0.5, 50.0], jnp.float32)))
+        # a zero threshold never hits; a huge one hits more than a moderate
+        assert fracs[0] == 0.0
+        assert fracs[2] >= fracs[1]
+
+    def test_traced_execute_mask_matches_static(self):
+        # 0.58 * 50 sits just below an integer in float64 but just above in
+        # float32 -- both paths must agree (they compute in float32)
+        for kind, frac, n in ((PerforationKind.INI, 0.25, 16),
+                              (PerforationKind.INI, 0.58, 50),
+                              (PerforationKind.FINI, 0.4, 16),
+                              (PerforationKind.FINI, 0.58, 50),
+                              (PerforationKind.RANDOM, 0.3, 16)):
+            p = PerforationParams(kind=kind, fraction=frac)
+            static = perforation.execute_mask(n, p)
+            traced = np.asarray(jax.jit(
+                lambda fr, p=p, n=n: perforation.traced_execute_mask(n, p,
+                                                                     fr)
+            )(jnp.float32(frac)))
+            np.testing.assert_array_equal(static, traced)
+
+    def test_traced_execute_mask_rejects_structural_kinds(self):
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=4)
+        with pytest.raises(ValueError):
+            perforation.traced_execute_mask(16, p, 0.5)
+
+    def test_perforated_loop_traced_fraction(self):
+        spec = ApproxSpec(Technique.PERFORATION,
+                          perforation=PerforationParams(
+                              kind=PerforationKind.INI, fraction=0.25,
+                              herded=False))
+        body = lambda i, acc: acc + jnp.float32(i)
+        out_s, frac_s = perforated_loop(spec, 8, body, jnp.float32(0))
+        out_t, frac_t = jax.jit(lambda fr: perforated_loop(
+            spec, 8, body, jnp.float32(0), fraction=fr))(jnp.float32(0.25))
+        assert float(out_s) == float(out_t)
+        assert float(frac_s) == float(frac_t)
+        # vmapped over a fraction stack: one compiled masked loop
+        vm = jax.jit(jax.vmap(lambda fr: perforated_loop(
+            spec, 8, body, jnp.float32(0), fraction=fr)[0]))
+        outs = np.asarray(vm(jnp.asarray([0.0, 0.25, 0.5], jnp.float32)))
+        assert outs[0] == 28.0 and outs[1] == float(out_s)
+
+    def test_region_hooks_pass_through(self):
+        n = 8
+        spec = ApproxSpec(Technique.TAF, taf=TAFParams(2, 4, 0.5))
+        region = ApproxRegion(spec, lambda x: x * 2.0, n_elements=n)
+        xs = jnp.ones((5, n), jnp.float32)
+        ys_s, frac_s = region.run(xs)
+        ys_t, frac_t = region.run(xs, rsd_threshold=jnp.float32(0.5))
+        np.testing.assert_allclose(np.asarray(ys_s), np.asarray(ys_t))
+        assert float(frac_s) == float(frac_t)
+
+    def test_region_rejects_unsupported_hooks(self):
+        n = 8
+        taf_region = ApproxRegion(ApproxSpec(Technique.TAF),
+                                  lambda x: x, n_elements=n)
+        iact_region = ApproxRegion(ApproxSpec(Technique.IACT),
+                                   lambda x: x, n_elements=n, in_dim=1)
+        xs = jnp.ones((3, n), jnp.float32)
+        with pytest.raises(ValueError):
+            taf_region.run(xs, threshold=0.5)      # iACT hook on a TAF region
+        with pytest.raises(ValueError):
+            iact_region.run(xs, rsd_threshold=0.5)  # TAF hook on iACT
+        with pytest.raises(ValueError):
+            taf_region.step(taf_region.init_state(), xs[0], threshold=0.5)

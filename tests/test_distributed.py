@@ -45,8 +45,8 @@ step = steps_mod.make_train_step(model, adamw.AdamWConfig(lr=1e-3))
 p1, o1, m1 = jax.jit(step)(params, opt, batch)
 
 # sharded
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh = make_mesh((2, 4), ('data', 'model'))
 p_sh = shardlib.param_shardings(mesh, params)
 o_sh = shardlib.opt_state_shardings(mesh, opt)
 b_sh = {k: jax.NamedSharding(mesh, jax.sharding.PartitionSpec('data'))
@@ -77,10 +77,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import CheckpointManager
 
 tree = {'w': jnp.arange(64.0).reshape(8, 8)}
-mesh_a = jax.make_mesh((4, 2), ('data', 'model'),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
-mesh_b = jax.make_mesh((2, 4), ('data', 'model'),
-                       axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.compat import make_mesh
+mesh_a = make_mesh((4, 2), ('data', 'model'))
+mesh_b = make_mesh((2, 4), ('data', 'model'))
 sh_a = {'w': NamedSharding(mesh_a, P('data', 'model'))}
 sh_b = {'w': NamedSharding(mesh_b, P('data', 'model'))}
 with tempfile.TemporaryDirectory() as d:
@@ -100,10 +99,10 @@ def test_pipeline_parallel_matches_serial():
     """GPipe shard_map pipeline over 4 stages == serial layer application."""
     out = run_sub(r"""
 import numpy as np, jax, jax.numpy as jnp
+from repro.compat import make_mesh
 from repro.runtime.pipeline import pipeline_apply
 
-mesh = jax.make_mesh((4,), ('stage',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ('stage',))
 rng = np.random.RandomState(0)
 n_stages, d = 4, 16
 ws = jnp.asarray(rng.standard_normal((n_stages, d, d)) * 0.3,
@@ -132,10 +131,10 @@ def test_production_shardings_are_valid_on_8dev():
 import jax, jax.numpy as jnp
 from repro.configs import get_smoke_config
 from repro.models import build
+from repro.compat import make_mesh
 from repro.runtime import sharding as shardlib
 
-mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ('data', 'model'))
 for arch in ('deepseek-7b', 'olmoe-1b-7b', 'rwkv6-1.6b', 'zamba2-7b'):
     cfg = get_smoke_config(arch)
     model = build(cfg)
@@ -154,11 +153,10 @@ def test_compressed_gradient_allreduce():
     out = run_sub(r"""
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+from repro.compat import make_mesh, shard_map
 from repro.optim import compress
 
-mesh = jax.make_mesh((8,), ('data',),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ('data',))
 rng = np.random.RandomState(0)
 g_global = jnp.asarray(rng.standard_normal((8, 128)), jnp.float32)
 
@@ -168,7 +166,7 @@ def reduce_compressed(g_local):
     return jax.lax.pmean(g_hat, 'data')[None]
 
 fn = shard_map(reduce_compressed, mesh=mesh, in_specs=P('data'),
-               out_specs=P('data'), check_vma=False)
+               out_specs=P('data'), check_replication=False)
 out = fn(g_global)
 exact = jnp.mean(g_global, axis=0)
 err = float(jnp.abs(out[0] - exact).max())

@@ -272,3 +272,211 @@ def test_refine_respects_budget_and_caches(tmp_path):
     executed2 = {spec_hash(s) for s in calls[n1:]
                  if s.technique != Technique.NONE}
     assert executed2.isdisjoint(db_before)
+
+
+# ------------------------------------------------------- batching protocol
+
+import os
+import sys
+
+import jax.numpy as jnp
+
+from repro.core import batching
+from repro.core.harness import run_specs
+from repro.core.types import IACTParams, PerforationKind, PerforationParams
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "examples"))
+
+
+def iact_spec(thresh, size=2, tpb=4):
+    return ApproxSpec(Technique.IACT, Level.ELEMENT,
+                      iact=IACTParams(size, thresh, tpb))
+
+
+def perfo_spec(kind, fraction):
+    return ApproxSpec(Technique.PERFORATION, Level.ELEMENT,
+                      perforation=PerforationParams(kind=kind,
+                                                    fraction=fraction))
+
+
+def test_static_key_groups_by_structure_only():
+    # same structure, different traced scalar -> same key
+    assert batching.static_key(taf_spec(0.1)) == \
+        batching.static_key(taf_spec(0.9))
+    assert batching.static_key(taf_spec(0.5, h=4)) != \
+        batching.static_key(taf_spec(0.5))
+    assert batching.static_key(iact_spec(0.3)) == \
+        batching.static_key(iact_spec(0.9))
+    assert batching.static_key(iact_spec(0.3, size=8)) != \
+        batching.static_key(iact_spec(0.3))
+    # fraction-kind perforation is batchable; skip-kind and NONE are not
+    assert batching.static_key(perfo_spec(PerforationKind.INI, 0.3)) \
+        is not None
+    assert batching.static_key(ApproxSpec(
+        Technique.PERFORATION,
+        perforation=PerforationParams(kind=PerforationKind.SMALL,
+                                      skip=4))) is None
+    assert batching.static_key(ApproxSpec()) is None
+
+
+def test_traced_param_per_technique():
+    assert batching.traced_param(taf_spec(0.7)) == 0.7
+    assert batching.traced_param(iact_spec(0.3)) == 0.3
+    assert batching.traced_param(perfo_spec(PerforationKind.FINI, 0.4)) == 0.4
+    with pytest.raises(ValueError):
+        batching.traced_param(ApproxSpec())
+
+
+def test_group_specs_demotes_small_groups():
+    specs = [taf_spec(0.1), taf_spec(0.5), taf_spec(0.9),  # group of 3
+             iact_spec(0.3),                               # singleton
+             ApproxSpec()]                                 # unbatchable
+    groups, serial = batching.group_specs(specs, min_group=2)
+    assert list(groups.values()) == [[0, 1, 2]]
+    assert serial == [3, 4]  # singleton + unbatchable both run serially
+
+
+def test_run_batch_grouped_matches_run_one():
+    app = make_toy_app()
+    grid = GRID + [iact_spec(0.3)] + [ApproxSpec()]
+    group_calls = []
+
+    def make_group_fn(key):
+        group_calls.append(key)
+        if key[0] != Technique.TAF:
+            return None  # decline: serial fallback
+
+        def fn(ths):
+            qois = jnp.stack([1.0 + 0.1 * ths,
+                              jnp.full_like(ths, 2.0)], axis=1)
+            return qois, ths / (1.0 + ths)
+
+        return fn
+
+    results = batching.run_batch_grouped(grid, app.run, make_group_fn)
+    assert [k[0] for k in group_calls] == [Technique.TAF]
+    for spec, got in zip(grid, results):
+        want = app.run(spec)
+        np.testing.assert_allclose(got.qoi, want.qoi, rtol=1e-6)
+        assert abs(got.approx_fraction - want.approx_fraction) < 1e-6
+
+
+def test_run_batch_grouped_rejects_bad_leading_dim():
+    def make_group_fn(key):
+        return lambda ths: (jnp.zeros((1, 2)), jnp.zeros((1,)))
+    with pytest.raises(ValueError):
+        batching.run_batch_grouped(GRID, make_toy_app().run, make_group_fn)
+
+
+def test_batched_runner_failure_falls_back_to_serial():
+    base = make_toy_app()
+    attempts = {"n": 0}
+
+    def bad_batch(specs):
+        attempts["n"] += 1
+        raise RuntimeError("device OOM")
+
+    app = ApproxApp("toy", base.run, run_batch=bad_batch)
+    serial = sweep(base, GRID, repeats=2, jobs=1)
+    recs = sweep(app, GRID, repeats=2, jobs=2)
+    assert attempts["n"] == 2  # one failed attempt per chunk of jobs=2
+    assert [r.to_json() for r in recs] == [r.to_json() for r in serial]
+
+
+def test_batched_runner_mid_repeat_failure_discards_partials():
+    """A chunk whose run_batch dies on repeat 2 of 3 falls back to the
+    serial path with the FULL repeat count (batch-amortized and serial
+    timings are not comparable best-of-N candidates)."""
+    base = make_toy_app()
+    state = {"calls": 0}
+
+    def flaky_batch(specs):
+        state["calls"] += 1
+        if state["calls"] > 1:
+            raise RuntimeError("flaky")
+        return [base.run(s) for s in specs]
+
+    app = ApproxApp("toy", base.run, run_batch=flaky_batch)
+    serial = sweep(base, GRID, repeats=3, jobs=1)
+    recs = sweep(app, GRID, repeats=3, jobs=len(GRID))
+    assert [r.to_json() for r in recs] == [r.to_json() for r in serial]
+
+
+# ------------------------------------------------- app run_batch parity
+
+
+def _taf_iact_grid():
+    return (taf_grid(h_sizes=(2,), p_sizes=(4,), thresholds=(0.1, 0.5, 1.5),
+                     levels=(Level.ELEMENT,)) +
+            iact_grid(t_sizes=(2,), thresholds=(0.3, 0.9, 5.0),
+                      tables_per_block=(4,), levels=(Level.ELEMENT,)))
+
+
+def _taf_perfo_grid():
+    return (taf_grid(h_sizes=(2,), p_sizes=(4,), thresholds=(0.5, 1.5, 5.0),
+                     levels=(Level.ELEMENT,)) +
+            [perfo_spec(PerforationKind.INI, f) for f in (0.1, 0.3, 0.5)] +
+            [perfo_spec(PerforationKind.FINI, f) for f in (0.25, 0.5)])
+
+
+APP_PARITY_CASES = {
+    "blackscholes": (
+        lambda m: m.make_app(n_elements=32, steps=8), _taf_iact_grid),
+    "binomial_options": (
+        lambda m: m.make_app(n_elements=16, steps=6, tree_steps=16),
+        _taf_iact_grid),
+    "kmeans": (
+        lambda m: m.make_app(n=128, d=4, k=6, max_iters=12), _taf_iact_grid),
+    "lavamd": (lambda m: m.make_app(nx=2), _taf_iact_grid),
+    "minife_cg": (lambda m: m.make_app(n=16, iters=8), _taf_perfo_grid),
+}
+
+
+def _diverged(err):
+    return (not np.isfinite(err)) or err > 1.0
+
+
+@pytest.mark.parametrize("name", sorted(APP_PARITY_CASES))
+def test_app_run_batch_matches_run(name, monkeypatch):
+    """Batched records must match serial records per spec: same error and
+    approx fraction (up to XLA fusion noise), same iteration counts.
+    MiniFE's divergent configurations (the paper's 593%..3.4e22% blow-up
+    regime) are chaotic, so both paths must diverge together rather than
+    agree to n digits."""
+    import importlib
+    mod = importlib.import_module(f"apps.{name}")
+    make, grid_fn = APP_PARITY_CASES[name]
+    app = make(mod)
+    assert app.run_batch is not None, f"{name} must provide run_batch"
+    grid = grid_fn()
+
+    # spy on the engine's serial-fallback path: a spec reaching run_one
+    # inside run_batch_grouped means it did NOT go through a vmapped group
+    fallback_specs = []
+    orig_rbg = batching.run_batch_grouped
+
+    def spying_rbg(specs, run_one, make_group_fn, **kw):
+        def counting_run_one(s):
+            fallback_specs.append(s)
+            return run_one(s)
+        return orig_rbg(specs, counting_run_one, make_group_fn, **kw)
+
+    monkeypatch.setattr(batching, "run_batch_grouped", spying_rbg)
+
+    serial = sweep(app, grid, repeats=1, jobs=1)
+    batched = sweep(app, grid, repeats=1, jobs=len(grid))
+    assert fallback_specs == [], \
+        f"{name}: specs fell back to serial instead of batching"
+
+    for s, b in zip(serial, batched):
+        assert s.spec == b.spec
+        if _diverged(s.error):
+            assert _diverged(b.error), (s.spec, s.error, b.error)
+        else:
+            assert abs(s.error - b.error) < 1e-5 or \
+                abs(s.error - b.error) / max(abs(s.error), 1e-12) < 1e-3, \
+                (s.spec, s.error, b.error)
+        assert abs(s.approx_fraction - b.approx_fraction) < 1e-6, s.spec
+        if "iters" in s.extra:
+            assert s.extra["iters"] == b.extra["iters"], s.spec

@@ -101,8 +101,8 @@ class TestCheckpoint:
     def test_restore_with_target_sharding(self, tmp_path):
         """Elastic path: restore device_puts with the TARGET sharding."""
         from jax.sharding import NamedSharding, PartitionSpec as P
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.compat import make_mesh
+        mesh = make_mesh((1,), ("data",))
         mgr = CheckpointManager(str(tmp_path))
         tree = {"w": jnp.arange(8.0)}
         mgr.save(1, tree)
