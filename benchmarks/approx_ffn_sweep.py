@@ -1,0 +1,74 @@
+"""Kernel-substrate sweep: the approx_ffn app (the first workload whose
+approximated region runs on the actual Pallas kernels) through the full v2
+harness -- batched runners, resumable DB, Pareto summary.
+
+Because the kernels' quality knobs are traced operands, the whole grid
+compiles once per structural group (hSize/pSize for TAF, tSize for iACT,
+perforation kind for the masked attention) regardless of how many
+thresholds/fractions it spans.
+
+Reports, per technique: the best-speedup-under-10%-error row (paper Fig. 6
+statistic, modeled speedup = the structural FLOP bound) and the Pareto
+front summary. Also cross-checks one spec per technique against the host
+substrate (the ref.py oracles): `mask_parity` asserts the kernel's
+approx-mask matches the oracle's bit for bit in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from apps import approx_ffn
+from repro.core import pareto
+from repro.core.harness import (best_speedup_under_error, iact_grid, sweep,
+                                taf_grid)
+from repro.core.types import (ApproxSpec, Level, PerforationKind,
+                              PerforationParams, Technique)
+
+
+def _grid():
+    taf = taf_grid(h_sizes=(2, 3), p_sizes=(2, 4),
+                   thresholds=(0.01, 0.05, 0.2, 1.0),
+                   levels=(Level.BLOCK,))
+    iact = iact_grid(t_sizes=(2, 4), thresholds=(0.05, 0.2, 0.5, 5.0),
+                     tables_per_block=(1,), levels=(Level.BLOCK,))
+    perfo = [ApproxSpec(Technique.PERFORATION, Level.BLOCK,
+                        perforation=PerforationParams(kind=k, fraction=f))
+             for k in (PerforationKind.INI, PerforationKind.FINI)
+             for f in (0.25, 0.5, 0.75)]
+    return taf + iact + perfo
+
+
+def main(report, jobs: int = 1, db_path: Optional[str] = None,
+         substrate: Optional[str] = "pallas") -> None:
+    app = approx_ffn.make_app(substrate=substrate)
+    grid = _grid()
+    recs = sweep(app, grid, repeats=1, db_path=db_path, jobs=max(jobs, 1))
+
+    for tech in ("taf", "iact", "perfo"):
+        rows = [r for r in recs if r.spec.get("technique") == tech]
+        best = best_speedup_under_error(rows, max_error=0.10,
+                                        use_modeled=True)
+        derived = ("no_config_under_10pct" if best is None else
+                   f"modeled={best.modeled_speedup:.2f}x,"
+                   f"err={best.error:.4f},approx={best.approx_fraction:.2f}")
+        wall = 0.0 if best is None else best.wall_time_s * 1e6
+        report(f"approx_ffn_{tech}_{app.workload['substrate']}",
+               f"{wall:.0f}", derived)
+
+    fs = pareto.front_summary(recs, use_modeled=True)
+    report("approx_ffn_front", f"{len(recs)}",
+           f"n_front={fs['n_front']},hv={fs['hypervolume']:.3f}")
+
+    # host-parity spot check (masks must match the oracle bit for bit):
+    # one probe per technique, selected by technique so grid edits can't
+    # silently shift a probe under the wrong label
+    host = approx_ffn.make_app(substrate="host")
+    probes = [next(s for s in grid if s.technique == t)
+              for t in (Technique.TAF, Technique.IACT,
+                        Technique.PERFORATION)]
+    prec = sweep(app, probes, repeats=1, db_path=db_path)
+    hrec = sweep(host, probes, repeats=1)
+    for p, h in zip(prec, hrec):
+        ok = p.extra.get("approx_mask") == h.extra.get("approx_mask")
+        report(f"approx_ffn_parity_{p.spec.get('technique')}", "0",
+               f"mask_parity={ok},err_delta={abs(p.error - h.error):.2e}")

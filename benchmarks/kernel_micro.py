@@ -3,10 +3,17 @@ the block-skip savings profile (structural FLOP reduction per config).
 
 Wall times here are interpret-mode (Python) -- meaningful only relatively;
 the structural numbers (executed grid fraction, FLOPs) are machine-true.
+With `artifacts_dir`, those structural numbers are also written to
+``<artifacts_dir>/kernel_micro.json`` (one row per measurement) so CI can
+upload them as a build artifact and diffs across commits are machine-
+comparable.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
+from typing import Optional
 
 import numpy as np
 import jax
@@ -26,49 +33,91 @@ def _time(f, *args):
     return (time.perf_counter() - t0) * 1e6
 
 
-def main(report):
+def main(report, artifacts_dir: Optional[str] = None):
+    rows = []
+
+    def emit(name, us, derived, **structural):
+        report(name, f"{us:.0f}", derived)
+        rows.append(dict(name=name, us_per_call=round(us, 1), **structural))
+
     rng = np.random.RandomState(0)
     m = k = n = 256
     x = jnp.asarray(np.tile(rng.randn(1, k), (m, 1)).astype(np.float32))
     w = jnp.asarray(rng.randn(k, n).astype(np.float32))
 
+    matmul_flops = 2.0 * m * k * n
     us = _time(lambda a, b: ops.taf_matmul(a, b, block_m=64, block_n=64)[0],
                x, w)
     y, mask = ops.taf_matmul(x, w, block_m=64, block_n=64)
     yr, mr = ref.taf_matmul_ref(x, w, block_m=64, block_n=64, history_size=3,
                                 prediction_size=8, rsd_threshold=0.5)
     ok = np.allclose(np.asarray(y), np.asarray(yr), atol=1e-3)
-    report("kernel_taf_matmul", f"{us:.0f}",
-           f"oracle_match={ok},blocks_skipped={np.asarray(mask).mean():.0%}")
+    skipped = float(np.asarray(mask).mean())
+    emit("kernel_taf_matmul", us,
+         f"oracle_match={ok},blocks_skipped={skipped:.0%}",
+         oracle_match=bool(ok), executed_grid_fraction=1.0 - skipped,
+         flops_total=matmul_flops,
+         flops_executed=matmul_flops * (1.0 - skipped))
 
     # 4 distinct row-values, each spanning 2 consecutive 32-row blocks:
     # the second block of each pair hits the table written by the first
     x2 = jnp.asarray(np.repeat(rng.randn(4, 64), 64, 0).astype(np.float32))
     w1 = jnp.asarray(rng.randn(64, 128).astype(np.float32) * 0.1)
     w2 = jnp.asarray(rng.randn(128, 32).astype(np.float32) * 0.1)
+    ffn_flops = 2.0 * 256 * 64 * 128 + 2.0 * 256 * 128 * 32
     us = _time(lambda a: ops.iact_rowfn(a, w1, w2, block_rows=32)[0], x2)
     y2, m2 = ops.iact_rowfn(x2, w1, w2, block_rows=32)
     y2r, m2r = ref.iact_rowfn_ref(x2, w1, w2, block_rows=32, table_size=4,
                                   threshold=0.5)
     ok = np.allclose(np.asarray(y2), np.asarray(y2r), atol=1e-3)
-    report("kernel_iact_rowfn", f"{us:.0f}",
-           f"oracle_match={ok},blocks_hit={np.asarray(m2).mean():.0%}")
+    hit = float(np.asarray(m2).mean())
+    emit("kernel_iact_rowfn", us,
+         f"oracle_match={ok},blocks_hit={hit:.0%}",
+         oracle_match=bool(ok), executed_grid_fraction=1.0 - hit,
+         flops_total=ffn_flops, flops_executed=ffn_flops * (1.0 - hit))
 
     for skip in (2, 4, 8):
         p = PerforationParams(kind=PerforationKind.SMALL, skip=skip)
         us = _time(lambda a, b: ops.perforated_matmul(
             a, b, block_m=64, block_n=64, block_k=64, perfo=p), x, w)
         saved = drop_fraction(k // 64, p)
-        report("kernel_perforated_matmul", f"{us:.0f}",
-               f"skip={skip},flops_saved={saved:.0%}")
+        emit("kernel_perforated_matmul", us,
+             f"skip={skip},flops_saved={saved:.0%}",
+             skip=skip, executed_grid_fraction=1.0 - saved,
+             flops_total=matmul_flops,
+             flops_executed=matmul_flops * (1.0 - saved))
 
     q = jnp.asarray(rng.randn(1, 4, 128, 64).astype(np.float32))
     kk = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
     v = jnp.asarray(rng.randn(1, 2, 256, 64).astype(np.float32))
+    attn_flops = 4.0 * 4 * 128 * 256 * 64  # qk + pv over 4 q heads
     for fr in (0.0, 0.5):
         p = (None if fr == 0.0 else
              PerforationParams(kind=PerforationKind.INI, fraction=fr))
         us = _time(lambda a, b, c: ops.perforated_attention(
             a, b, c, block_q=64, block_kv=64, perfo=p), q, kk, v)
-        report("kernel_perforated_attention", f"{us:.0f}",
-               f"ini_drop={fr:.0%}")
+        emit("kernel_perforated_attention", us, f"ini_drop={fr:.0%}",
+             ini_drop=fr, executed_grid_fraction=1.0 - fr,
+             flops_total=attn_flops, flops_executed=attn_flops * (1.0 - fr))
+
+    # traced-knob dispatch cost: same kernel, swept threshold, ZERO recompiles
+    from repro.kernels.taf_matmul import taf_matmul as taf_jit
+    ops.taf_matmul(x, w, block_m=64, block_n=64, rsd_threshold=0.1)
+    before = taf_jit._cache_size()
+    t0 = time.perf_counter()
+    n_sweep = 16
+    for th in np.linspace(0.05, 2.0, n_sweep):
+        jax.block_until_ready(ops.taf_matmul(
+            x, w, block_m=64, block_n=64, rsd_threshold=float(th))[0])
+    us = (time.perf_counter() - t0) * 1e6 / n_sweep
+    recompiles = taf_jit._cache_size() - before
+    emit("kernel_taf_threshold_sweep", us,
+         f"n={n_sweep},recompiles={recompiles}",
+         n_sweep=n_sweep, recompiles=int(recompiles))
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        path = os.path.join(artifacts_dir, "kernel_micro.json")
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1)
+        report("kernel_micro_json", "0", path)

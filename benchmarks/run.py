@@ -9,6 +9,10 @@ Prints ``name,us_per_call,derived`` CSV lines. Usage:
 evaluation width (batched runner chunk size / thread-pool workers).
 ``--db`` points those modules at a persistent results database, making
 re-runs resumable (cached specs are not re-executed).
+``--substrate`` selects the execution substrate (host | pallas) for modules
+that dispatch through `repro.core.substrate` (currently the `ffn` kernel
+sweep). ``--artifacts`` names a directory for machine-readable outputs
+(kernel_micro writes its structural numbers there as JSON).
 """
 from __future__ import annotations
 
@@ -19,10 +23,10 @@ import time
 
 sys.path.insert(0, "examples")
 
-from . import (fig3_table_memory, fig6_best_speedup, fig7_cg_sweep,
-               fig8c_items_per_thread, fig10c_rsd_behavior, fig11c_hierarchy,
-               fig12c_kmeans_convergence, kernel_micro, pareto_refine,
-               roofline_table)
+from . import (approx_ffn_sweep, fig3_table_memory, fig6_best_speedup,
+               fig7_cg_sweep, fig8c_items_per_thread, fig10c_rsd_behavior,
+               fig11c_hierarchy, fig12c_kmeans_convergence, kernel_micro,
+               pareto_refine, roofline_table)
 
 MODULES = {
     "fig3": fig3_table_memory,
@@ -33,6 +37,7 @@ MODULES = {
     "fig11c": fig11c_hierarchy,
     "fig12c": fig12c_kmeans_convergence,
     "kernel": kernel_micro,
+    "ffn": approx_ffn_sweep,
     "pareto": pareto_refine,
     "roofline": roofline_table,
 }
@@ -47,6 +52,10 @@ def main() -> None:
                     help="parallel evaluation width for sweep-based modules")
     ap.add_argument("--db", default=None,
                     help="path to a persistent sweep DB (enables resume)")
+    ap.add_argument("--substrate", default=None, choices=["host", "pallas"],
+                    help="execution substrate for kernel-aware modules")
+    ap.add_argument("--artifacts", default=None,
+                    help="directory for machine-readable outputs (JSON)")
     args = ap.parse_args()
     keys = args.only.split(",") if args.only else list(MODULES)
     for key in keys:  # fail fast, before any module burns sweep time
@@ -62,8 +71,10 @@ def main() -> None:
     for key in keys:
         mod = MODULES[key.strip()]
         accepted = inspect.signature(mod.main).parameters
-        kw = {k: v for k, v in (("jobs", args.jobs), ("db_path", args.db))
-              if k in accepted}
+        kw = {k: v for k, v in (("jobs", args.jobs), ("db_path", args.db),
+                                ("substrate", args.substrate),
+                                ("artifacts_dir", args.artifacts))
+              if k in accepted and v is not None}
         t0 = time.time()
         try:
             mod.main(report, **kw)

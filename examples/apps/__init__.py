@@ -10,8 +10,12 @@ CPU container; the DSE harness sweeps paper-Table-2-style grids over them.
   kmeans           -- Rodinia K-Means (MCR metric, convergence speedup)
   lavamd           -- Rodinia LavaMD-like particle forces in boxes
   minife_cg        -- MiniFE-like CG solver on a Poisson stencil
+  approx_ffn       -- kernel-backed transformer block (the only app whose
+                      approximated region runs on the Pallas kernel
+                      substrate; host substrate = the ref.py oracles)
 """
-from . import binomial_options, blackscholes, kmeans, lavamd, minife_cg
+from . import (approx_ffn, binomial_options, blackscholes, kmeans, lavamd,
+               minife_cg)
 
-__all__ = ["binomial_options", "blackscholes", "kmeans", "lavamd",
-           "minife_cg"]
+__all__ = ["approx_ffn", "binomial_options", "blackscholes", "kmeans",
+           "lavamd", "minife_cg"]

@@ -1,0 +1,320 @@
+"""approx_ffn: the first KERNEL-backed workload -- a tiny transformer block
+whose approximated region runs on the Pallas kernel substrate.
+
+Every other app in this suite emulates the paper's techniques at the host
+level (`core/taf.py`, `core/iact.py`); their sweeps therefore never touch
+`src/repro/kernels/`. This app closes that gap: the pipeline
+
+    x --taf_matmul--> proj --perforated_attention--> ctx --iact_rowfn--> y
+
+puts one Pallas kernel behind each technique, and the spec's technique
+selects which stage is approximated (the others run exact):
+
+  TAF          -- the (S, d) x (d, d) projection via `kernels.taf_matmul`
+                  (block-level output memoization over row blocks);
+  IACT         -- the FFN tile via `kernels.iact_rowfn` (VMEM memo table,
+                  majority vote, single-writer insert);
+  PERFORATION  -- self-attention via `kernels.perforated_attention` (herded
+                  KV-block dropping; traced-fraction masked mode).
+
+Substrates (`repro.core.substrate`):
+
+  "pallas" -- the kernels (Mosaic on TPU, interpret mode on CPU). Quality
+              knobs are TRACED kernel operands: a serial threshold sweep
+              compiles once per structural group, and `run_batch` vmaps
+              stacked knobs through one compiled pipeline per group.
+  "host"   -- the pure-jnp/numpy oracles in `kernels/ref.py`, which
+              implement identical block semantics: the parity reference
+              for outputs, approx masks and QoI error.
+
+Decisions are block-level on both substrates (the kernels' only
+real-savings mode; specs should use Level.BLOCK). QoI: the block's output
+activations. Error: MAPE. Wall times on CPU are interpret-mode (Python)
+numbers -- meaningful only relatively; `flop_fraction` carries the
+machine-true structural savings.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import batching
+from repro.core import perforation as perfo_mod
+from repro.core import substrate as substrate_mod
+from repro.core.harness import AppResult, ApproxApp
+from repro.core.types import ApproxSpec, PerforationKind, Technique
+
+# Block geometry: fixed by the app (structural; not part of the spec grid).
+_BLOCK_M = 16      # taf_matmul row block => seq/16 temporal steps
+_BLOCK_ROWS = 16   # iact_rowfn rows per table block
+_BLOCK_ATTN = 32   # attention q/kv block => seq/32 KV blocks
+
+
+def gen_inputs(seq: int, d: int, seed: int = 0) -> np.ndarray:
+    """(seq, d) with row-BLOCK temporal locality: rows within a 16-row block
+    are near-identical and successive blocks drift on a slow random walk, so
+    TAF's window RSD and iACT's distance threshold genuinely discriminate
+    across the sweep grids."""
+    rng = np.random.RandomState(seed)
+    n_blocks = seq // _BLOCK_M
+    base = rng.randn(1, d).astype(np.float32)
+    drift = np.cumsum(0.04 * rng.randn(n_blocks, 1, d), axis=0)
+    blocks = base[None] + drift.astype(np.float32)           # (B, 1, d)
+    x = np.repeat(blocks, _BLOCK_M, axis=1).reshape(seq, d)
+    x = x + 0.01 * rng.randn(seq, d).astype(np.float32)
+    return x.astype(np.float32)
+
+
+@lru_cache(maxsize=8)
+def _arrays(seq: int, d: int, d_h: int, heads: int, seed: int):
+    rng = np.random.RandomState(seed + 1)
+    x = jnp.asarray(gen_inputs(seq, d, seed))
+    wp = jnp.asarray(rng.randn(d, d).astype(np.float32) / np.sqrt(d))
+    w1 = jnp.asarray(rng.randn(d, d_h).astype(np.float32) / np.sqrt(d))
+    w2 = jnp.asarray(rng.randn(d_h, d).astype(np.float32) / np.sqrt(d_h))
+    return x, wp, w1, w2
+
+
+def _split_heads(p: jnp.ndarray, heads: int) -> jnp.ndarray:
+    s, d = p.shape
+    return p.reshape(s, heads, d // heads).transpose(1, 0, 2)[None]
+
+
+def _merge_heads(a: jnp.ndarray) -> jnp.ndarray:
+    _, h, s, dh = a.shape
+    return a[0].transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def _attn_exact(p: jnp.ndarray, heads: int) -> jnp.ndarray:
+    from repro.kernels import ref
+    q = _split_heads(p, heads)
+    return _merge_heads(ref.attention_ref(q, q, q, causal=True))
+
+
+def _ffn_exact(a: jnp.ndarray, w1, w2) -> jnp.ndarray:
+    return jax.nn.gelu(a @ w1) @ w2
+
+
+def _flops(seq: int, d: int, d_h: int) -> Tuple[float, float, float]:
+    """(proj, attn, ffn) accurate-path FLOPs (causal factor ignored: it is
+    common to numerator and denominator of flop_fraction)."""
+    proj = 2.0 * seq * d * d
+    attn = 4.0 * seq * seq * d
+    ffn = 2.0 * seq * d * d_h + 2.0 * seq * d_h * d
+    return proj, attn, ffn
+
+
+def _flop_fraction(technique: Technique, approx_frac, seq, d, d_h):
+    proj, attn, ffn = _flops(seq, d, d_h)
+    total = proj + attn + ffn
+    if technique == Technique.TAF:
+        exec_ = proj * (1.0 - approx_frac) + attn + ffn
+    elif technique == Technique.IACT:
+        exec_ = proj + attn + ffn * (1.0 - approx_frac)
+    elif technique == Technique.PERFORATION:
+        exec_ = proj + attn * (1.0 - approx_frac) + ffn
+    else:
+        exec_ = total
+    return max(float(exec_ / total), 1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Pallas substrate: jitted pipelines, one compile per STRUCTURAL group
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=8)
+def _exact_runner(seq, d, d_h, heads, seed):
+    x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+
+    @jax.jit
+    def run():
+        a = _attn_exact(x @ wp, heads)
+        return _ffn_exact(a, w1, w2)
+    return run
+
+
+@lru_cache(maxsize=64)
+def _pallas_knob_runner(key, seq, d, d_h, heads, seed):
+    """jitted `fn(knob) -> (qoi, approx_frac, mask)` for a batching
+    static-structure key: the quality knob is a TRACED argument, so every
+    spec in the group -- and, under `jax.vmap`, a whole stack of them --
+    shares this one compiled pipeline."""
+    x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+    spec = batching.spec_from_key(key)
+    tech = key[0]
+
+    if tech == Technique.TAF:
+        def body(knob):
+            p, mask = substrate_mod.taf_matmul_region(
+                x, wp, spec, block_m=_BLOCK_M, block_n=d, rsd_threshold=knob)
+            qoi = _ffn_exact(_attn_exact(p, heads), w1, w2)
+            frac = jnp.mean(mask.astype(jnp.float32))
+            return qoi, frac, mask
+    elif tech == Technique.IACT:
+        def body(knob):
+            a = _attn_exact(x @ wp, heads)
+            qoi, mask = substrate_mod.iact_ffn_region(
+                a, w1, w2, spec, block_rows=_BLOCK_ROWS, threshold=knob)
+            frac = jnp.mean(mask.astype(jnp.float32))
+            return qoi, frac, mask
+    elif tech == Technique.PERFORATION:
+        def body(knob):
+            p = x @ wp
+            q = _split_heads(p, heads)
+            o, kept = substrate_mod.attention_region(
+                q, q, q, spec, block_q=_BLOCK_ATTN, block_kv=_BLOCK_ATTN,
+                fraction=knob)
+            qoi = _ffn_exact(_merge_heads(o), w1, w2)
+            frac = 1.0 - jnp.mean(kept.astype(jnp.float32))
+            return qoi, frac, jnp.logical_not(kept)
+    else:
+        raise ValueError(f"no knob runner for {tech}")
+    return jax.jit(body)
+
+
+@lru_cache(maxsize=64)
+def _pallas_structural_runner(perfo, seq, d, d_h, heads, seed):
+    """Structural (skip-driven) perforation: the kept set shapes the grid,
+    so each distinct `perfo` is its own compile -- the herded payoff is that
+    dropped KV blocks are never visited at all."""
+    x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+    spec = ApproxSpec(Technique.PERFORATION, perforation=perfo)
+
+    @jax.jit
+    def run():
+        p = x @ wp
+        q = _split_heads(p, heads)
+        o, kept = substrate_mod.attention_region(
+            q, q, q, spec, block_q=_BLOCK_ATTN, block_kv=_BLOCK_ATTN)
+        qoi = _ffn_exact(_merge_heads(o), w1, w2)
+        frac = 1.0 - jnp.mean(kept.astype(jnp.float32))
+        return qoi, frac, jnp.logical_not(kept)
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Host substrate: the ref.py oracles (identical block semantics, eager)
+# ---------------------------------------------------------------------------
+
+def _host_eval(spec: ApproxSpec, seq, d, d_h, heads, seed):
+    from repro.kernels import ref
+    x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+    t = spec.technique
+    if t == Technique.TAF:
+        p, mask = ref.taf_matmul_ref(
+            x, wp, block_m=_BLOCK_M, block_n=d,
+            history_size=spec.taf.history_size,
+            prediction_size=spec.taf.prediction_size,
+            rsd_threshold=spec.taf.rsd_threshold)
+        qoi = _ffn_exact(_attn_exact(p, heads), w1, w2)
+        return qoi, np.asarray(mask)
+    if t == Technique.IACT:
+        a = _attn_exact(x @ wp, heads)
+        qoi, mask = ref.iact_rowfn_ref(
+            a, w1, w2, block_rows=_BLOCK_ROWS,
+            table_size=spec.iact.table_size,
+            threshold=spec.iact.threshold)
+        return qoi, np.asarray(mask)
+    if t == Technique.PERFORATION:
+        p = x @ wp
+        q = _split_heads(p, heads)
+        o = ref.attention_ref(q, q, q, causal=True, block_kv=_BLOCK_ATTN,
+                              perfo=spec.perforation)
+        qoi = _ffn_exact(_merge_heads(o), w1, w2)
+        nkv = seq // _BLOCK_ATTN
+        mask = ~perfo_mod.execute_mask(nkv, spec.perforation)
+        return qoi, mask
+    raise ValueError(f"no host evaluator for {t}")  # NONE handled by run()
+
+
+# ---------------------------------------------------------------------------
+# The ApproxApp
+# ---------------------------------------------------------------------------
+
+def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
+             d_h: int = 64, heads: int = 2, seed: int = 0) -> ApproxApp:
+    """`substrate=None` resolves the ambient default ONCE, at construction
+    (it is part of the workload fingerprint: pallas and host rows must not
+    share DB cache keys)."""
+    sub = substrate_mod.resolve(substrate)
+    assert seq % _BLOCK_ATTN == 0 and d % heads == 0
+
+    def _result(spec, qoi, frac, mask, wall):
+        return AppResult(
+            qoi=np.asarray(qoi), wall_time_s=wall,
+            approx_fraction=float(frac),
+            flop_fraction=_flop_fraction(spec.technique, float(frac),
+                                         seq, d, d_h),
+            extra={"approx_mask":
+                   np.asarray(mask).astype(int).ravel().tolist()})
+
+    def run(spec: ApproxSpec) -> AppResult:
+        # The exact baseline shares one jitted pipeline across substrates;
+        # warm it up so the compile never lands inside the timed window
+        # (Record.speedup divides by this wall time).
+        if spec.technique == Technique.NONE:
+            fn = _exact_runner(seq, d, d_h, heads, seed)
+            jax.block_until_ready(fn())  # compile + warmup
+            t0 = time.perf_counter()
+            qoi = jax.block_until_ready(fn())
+            return _result(spec, qoi, 0.0, np.zeros((0,)),
+                           time.perf_counter() - t0)
+        if sub == substrate_mod.HOST:
+            # eager oracle loops: no compile to warm, but the exact stages
+            # they share (_attn_exact/_ffn_exact) are jnp -- run once so
+            # dispatch setup is off the clock too
+            _host_eval(spec, seq, d, d_h, heads, seed)
+            t0 = time.perf_counter()
+            qoi, mask = _host_eval(spec, seq, d, d_h, heads, seed)
+            qoi = jax.block_until_ready(qoi)
+            wall = time.perf_counter() - t0
+            frac = float(mask.mean()) if mask.size else 0.0
+            return _result(spec, qoi, frac, mask, wall)
+        # pallas substrate: pick the structurally-right compiled runner
+        key = batching.static_key(spec)
+        if key is not None:
+            fn = _pallas_knob_runner(key, seq, d, d_h, heads, seed)
+            knob = jnp.float32(batching.traced_param(spec))
+            out = fn(knob)  # compile (per structural group) + warmup
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            qoi, frac, mask = fn(knob)
+            jax.block_until_ready(qoi)
+        else:  # skip-driven perforation: structural kept set
+            fn = _pallas_structural_runner(spec.perforation, seq, d, d_h,
+                                           heads, seed)
+            jax.block_until_ready(fn())
+            t0 = time.perf_counter()
+            qoi, frac, mask = fn()
+            jax.block_until_ready(qoi)
+        return _result(spec, qoi, float(frac), mask,
+                       time.perf_counter() - t0)
+
+    run_batch = None
+    if sub == substrate_mod.PALLAS:
+        def make_group_fn(key):
+            knob_fn = _pallas_knob_runner(key, seq, d, d_h, heads, seed)
+            vmapped = jax.jit(jax.vmap(knob_fn))
+
+            def group(knobs):
+                qois, fracs, masks = vmapped(knobs)
+                return qois, fracs, {"approx_mask": masks}
+            return group
+
+        def result_builder(qoi, frac, extra, wall, spec):
+            mask = np.asarray(extra.get("approx_mask", np.zeros((0,))))
+            return _result(spec, qoi, frac, mask, wall)
+
+        run_batch = batching.make_run_batch(run, make_group_fn,
+                                            result_builder=result_builder)
+
+    return ApproxApp(
+        name="approx_ffn", run=run, error_metric="mape",
+        run_batch=run_batch,
+        workload=dict(substrate=sub, seq=seq, d=d, d_h=d_h, heads=heads,
+                      seed=seed))

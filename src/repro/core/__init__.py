@@ -15,16 +15,18 @@ Public surface:
                   structure, vmap one compiled evaluation over the stacked
                   traced scalars
   pareto       -- error/speedup Pareto front + front-guided refinement
+  substrate    -- host vs pallas execution-substrate selection + the
+                  kernel-backed region evaluators
 """
 from . import (approx, autotune, batching, harness, hierarchy, iact, pareto,
-               perforation, rsd, taf, types)
+               perforation, rsd, substrate, taf, types)
 from .approx import ApproxRegion, perforated_loop
 from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
                     PerforationParams, TAFParams, Technique, parse_pragma)
 
 __all__ = [
     "approx", "autotune", "batching", "harness", "hierarchy", "iact",
-    "pareto", "perforation", "rsd", "taf",
+    "pareto", "perforation", "rsd", "substrate", "taf",
     "types", "ApproxRegion", "perforated_loop", "ApproxSpec", "IACTParams",
     "Level", "PerforationKind", "PerforationParams", "TAFParams", "Technique",
     "parse_pragma",

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 
 from . import iact as iact_mod
 from . import perforation as perfo_mod
+from . import substrate as substrate_mod
 from . import taf as taf_mod
 from .types import ApproxSpec, Level, Technique, parse_pragma  # re-export
 
@@ -51,6 +52,25 @@ class ApproxRegion:
     out_shape: Tuple[int, ...] = ()
     out_dtype: object = jnp.float32
     tile_size: Optional[int] = None
+    # Execution substrate: None resolves the ambient default at call time
+    # (see repro.core.substrate -- the harness's `substrate=` kwarg scopes
+    # it), "host"/"pallas" pin one. The pallas substrate needs a concrete
+    # kernel implementation of THIS region's fn: a callable
+    # `pallas_impl(x, *, rsd_threshold=None, threshold=None) ->
+    # (out, approx_mask)` -- typically a partial over
+    # `substrate.taf_matmul_region` / `substrate.iact_ffn_region` (the
+    # memoization techniques are the only region-shaped ones; perforation
+    # stays loop-shaped via perforated_loop / substrate.attention_region).
+    substrate: Optional[str] = None
+    pallas_impl: Optional[Callable] = None
+
+    def _resolve_substrate(self) -> str:
+        sub = substrate_mod.resolve(self.substrate)
+        if sub == substrate_mod.PALLAS and self.pallas_impl is None:
+            raise ValueError(
+                "substrate='pallas' needs a pallas_impl: a kernel-backed "
+                "implementation of this region (see repro.core.substrate)")
+        return sub
 
     def init_state(self):
         t = self.spec.technique
@@ -82,9 +102,22 @@ class ApproxRegion:
         hooks -- possibly traced scalars overriding the spec's static value,
         which is how a region participates in a vmapped batched sweep.
         Passing a hook the technique doesn't support raises ValueError.
+
+        On the pallas substrate the kernel implementation is invoked (one
+        kernel call = one invocation); the kernel owns its AC state in
+        scratch memory, so `state` passes through unchanged.
         """
         self._check_hooks(rsd_threshold, threshold)
         t = self.spec.technique
+        # Only the memoization techniques dispatch to a kernel here: NONE
+        # (the exact region) runs its fn on any substrate, and PERFORATION
+        # keeps its "use perforated_loop" contract on both substrates (the
+        # loop-shaped techniques never fit the region step/run shape).
+        if t in (Technique.TAF, Technique.IACT) and \
+                self._resolve_substrate() == substrate_mod.PALLAS:
+            out, mask = self.pallas_impl(x, rsd_threshold=rsd_threshold,
+                                         threshold=threshold)
+            return out, state, mask
         if t == Technique.TAF:
             thunk = (lambda: self.fn(x)) if x is not None else self.fn
             return taf_mod.step(state, thunk, self.spec.taf, self.spec.level,
@@ -105,9 +138,19 @@ class ApproxRegion:
 
         Accepts the same traced-parameter hooks as `step`.
         Returns (outputs, approx_fraction).
+
+        On the pallas substrate a single kernel call IS the invocation
+        sequence (the sequential TPU grid is the paper's temporal loop), so
+        `xs` is passed through whole and the kernel's approx mask yields
+        the fraction.
         """
         self._check_hooks(rsd_threshold, threshold)
         t = self.spec.technique
+        if t in (Technique.TAF, Technique.IACT) and \
+                self._resolve_substrate() == substrate_mod.PALLAS:
+            ys, mask = self.pallas_impl(xs, rsd_threshold=rsd_threshold,
+                                        threshold=threshold)
+            return ys, jnp.mean(jnp.asarray(mask).astype(jnp.float32))
         if t == Technique.TAF:
             ys, _, frac = taf_mod.run_sequence(self.spec.taf, xs, self.fn,
                                                self.spec.level,
@@ -173,8 +216,10 @@ def perforated_loop(spec: ApproxSpec, n_iters: int,
 
         out = jax.lax.fori_loop(0, len(keep), kept_body, carry)
         return out, len(keep) / max(n_iters, 1)
-    # Non-herded / masked fallback: every iteration runs; skipped ones are
-    # data-masked inside `body` by convention (body receives -1).
+    # Non-herded / masked fallback: the loop still visits every index, but
+    # `body` is never invoked for a skipped iteration -- `lax.cond` passes
+    # the carry through unchanged, so the saving is the body's compute
+    # (uniformity, not trip count, is what this variant gives up).
     mask = perfo_mod.execute_mask(n_iters, p)
     mask_arr = jnp.asarray(mask)
 

@@ -18,17 +18,20 @@ one). For Pareto-front-guided refinement of a coarse grid, see
 from __future__ import annotations
 
 import random
-from typing import Callable, List, Sequence
+from typing import Callable, List, Optional, Sequence
 
+from . import substrate as substrate_mod
 from .harness import AppResult, ApproxApp, Record, _make_record, run_specs
 from .types import ApproxSpec
 
 
 def _evaluate_all(app: ApproxApp, specs: Sequence[ApproxSpec],
-                  exact: AppResult, repeats: int, jobs: int) -> List[Record]:
+                  exact: AppResult, repeats: int, jobs: int,
+                  substrate: Optional[str] = None) -> List[Record]:
     """Score a pool of specs via harness.run_specs -- the same dispatch as
-    sweep (batched runner when the app has one, thread pool otherwise)."""
-    results = run_specs(app, specs, repeats, jobs)
+    sweep (batched runner when the app has one, thread pool otherwise).
+    `substrate` scopes the ambient execution substrate (host/pallas)."""
+    results = run_specs(app, specs, repeats, jobs, substrate=substrate)
     return [_make_record(app, s, res, exact)
             for s, res in zip(specs, results)]
 
@@ -44,20 +47,24 @@ def _score(rec: Record, max_error: float) -> float:
 def successive_halving(app: ApproxApp, specs: Sequence[ApproxSpec], *,
                        max_error: float = 0.10, eta: int = 3,
                        base_repeats: int = 1, jobs: int = 1,
-                       seed: int = 0) -> List[Record]:
+                       seed: int = 0,
+                       substrate: Optional[str] = None) -> List[Record]:
     """Multi-fidelity race over `specs`: each rung costs ~n_base cheap
     evaluations (the pool shrinks by eta while fidelity grows by eta), so
     the total is ~n x n_rungs vs n x final_fidelity for an exhaustive sweep
     at the final fidelity. Returns the FINAL rung's records, best first.
-    `jobs > 1` evaluates each rung's pool concurrently."""
+    `jobs > 1` evaluates each rung's pool concurrently. `substrate` scopes
+    the ambient execution substrate for every evaluation."""
     rng = random.Random(seed)
-    exact = app.exact()
+    with substrate_mod.use(substrate):
+        exact = app.exact()
     pool = list(specs)
     rng.shuffle(pool)
     repeats = base_repeats
     rung_records: List[Record] = []
     while pool:
-        rung_records = _evaluate_all(app, pool, exact, repeats, jobs)
+        rung_records = _evaluate_all(app, pool, exact, repeats, jobs,
+                                     substrate)
         ranked = sorted(zip(rung_records, pool),
                         key=lambda rs: -_score(rs[0], max_error))
         keep = max(1, len(pool) // eta)
@@ -73,10 +80,13 @@ def random_search(app: ApproxApp, sampler: Callable[[random.Random],
                                                     ApproxSpec], *,
                   budget: int = 20, max_error: float = 0.10,
                   repeats: int = 1, jobs: int = 1,
-                  seed: int = 0) -> List[Record]:
-    """Budget-capped random search with a spec sampler."""
+                  seed: int = 0,
+                  substrate: Optional[str] = None) -> List[Record]:
+    """Budget-capped random search with a spec sampler. `substrate` scopes
+    the ambient execution substrate for every evaluation."""
     rng = random.Random(seed)
-    exact = app.exact()
+    with substrate_mod.use(substrate):
+        exact = app.exact()
     specs = [sampler(rng) for _ in range(budget)]
-    records = _evaluate_all(app, specs, exact, repeats, jobs)
+    records = _evaluate_all(app, specs, exact, repeats, jobs, substrate)
     return sorted(records, key=lambda r: -_score(r, max_error))

@@ -31,6 +31,7 @@ so resumed or densified sweeps recompile nothing.
 """
 from __future__ import annotations
 
+import inspect
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -41,13 +42,10 @@ import jax.numpy as jnp
 from . import iact as iact_mod
 from . import taf as taf_mod
 from .harness import AppResult
-from .types import (ApproxSpec, IACTParams, PerforationKind,
-                    PerforationParams, TAFParams, Technique)
-
-# Perforation kinds whose knob is the (traceable) fraction; skip-driven
-# kinds are purely structural and cannot share a compiled program.
-FRACTION_KINDS = (PerforationKind.INI, PerforationKind.FINI,
-                  PerforationKind.RANDOM)
+from .perforation import FRACTION_KINDS  # re-export: the traced-fraction
+#    kinds; skip-driven kinds are structural and cannot share a compile
+from .types import (ApproxSpec, IACTParams, PerforationParams, TAFParams,
+                    Technique)
 
 
 def static_key(spec: ApproxSpec) -> Optional[Tuple]:
@@ -180,7 +178,12 @@ def run_batch_grouped(
     the serial apps report after their own warmup call). `fn` returns
     `(qoi_stack, frac_stack)` or `(qoi_stack, frac_stack, extras_dict)`
     with every stack's leading dim == len(group).
+
+    `result_builder(qoi, frac, extra, wall[, spec])` assembles each
+    AppResult; builders that declare a 5th parameter also receive the
+    spec (needed e.g. for technique-dependent FLOP accounting).
     """
+    wants_spec = len(inspect.signature(result_builder).parameters) >= 5
     results: List[Optional[AppResult]] = [None] * len(specs)
     groups, serial = group_specs(specs, min_group=min_group)
     for i in serial:
@@ -208,8 +211,10 @@ def run_batch_grouped(
                 f"group runner for {key} returned leading dim "
                 f"{qois.shape[0]}/{fracs.shape[0]} for {len(idxs)} specs")
         for j, i in enumerate(idxs):
-            results[i] = result_builder(qois[j], float(fracs[j]),
-                                        _per_spec_extra(extras, j), wall)
+            args = (qois[j], float(fracs[j]), _per_spec_extra(extras, j),
+                    wall)
+            results[i] = (result_builder(*args, specs[i]) if wants_spec
+                          else result_builder(*args))
     return results
 
 

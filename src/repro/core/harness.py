@@ -39,6 +39,7 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from . import substrate as substrate_mod
 from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
                     PerforationParams, TAFParams, Technique)
 
@@ -286,23 +287,32 @@ def _run_batched(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int,
 
 
 def run_specs(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int = 1,
-              jobs: int = 1) -> List[AppResult]:
+              jobs: int = 1, *,
+              substrate: Optional[str] = None) -> List[AppResult]:
     """Evaluate specs with best-of-`repeats` timing, dispatching to the
     app's batched runner (chunks of `jobs`) or a thread pool when jobs > 1.
-    The single parallel-dispatch path shared by sweep and the autotuners."""
+    The single parallel-dispatch path shared by sweep and the autotuners.
+
+    `substrate` ("host" / "pallas") scopes the ambient execution substrate
+    for the whole evaluation (see `repro.core.substrate`): apps and
+    ApproxRegions that resolve the substrate at run time are flipped onto
+    the Pallas kernels; apps that pinned one at construction are unaffected.
+    """
     specs = list(specs)
-    if jobs > 1 and app.run_batch is not None:
-        return _run_batched(app, specs, repeats, batch_size=jobs)
-    if jobs > 1:
-        with ThreadPoolExecutor(max_workers=jobs) as pool:
-            return list(pool.map(
-                lambda s: _timed(lambda: app.run(s), repeats), specs))
-    return [_timed(lambda: app.run(s), repeats) for s in specs]
+    with substrate_mod.use(substrate):
+        if jobs > 1 and app.run_batch is not None:
+            return _run_batched(app, specs, repeats, batch_size=jobs)
+        if jobs > 1:
+            with ThreadPoolExecutor(max_workers=jobs) as pool:
+                return list(pool.map(
+                    lambda s: _timed(lambda: app.run(s), repeats), specs))
+        return [_timed(lambda: app.run(s), repeats) for s in specs]
 
 
 def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
           db_path: Optional[str] = None, verbose: bool = False, *,
-          jobs: int = 1, resume: bool = True) -> List[Record]:
+          jobs: int = 1, resume: bool = True,
+          substrate: Optional[str] = None) -> List[Record]:
     """Run `app` once per spec (plus the exact baseline), computing error
     vs. the exact QoI and speedups; append new results to the JSON database.
 
@@ -322,6 +332,11 @@ def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
     contention noise, and a batched runner reports batch time amortized
     per spec -- compare wall-time speedups only across rows produced the
     same way.
+
+    `substrate`: ambient execution substrate for the evaluations (exact
+    baseline included) -- see `run_specs`. Apps whose substrate matters to
+    their results should bake it into `workload` so DB cache keys do not
+    collide across substrates.
     """
     specs = list(specs)
     hashes = [spec_hash(s) for s in specs]
@@ -347,8 +362,10 @@ def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
 
     fresh: Dict[str, Record] = {}
     if todo:
-        exact = _timed(lambda: app.exact(), repeats)
-        results = run_specs(app, [s for _, s in todo], repeats, jobs)
+        with substrate_mod.use(substrate):
+            exact = _timed(lambda: app.exact(), repeats)
+        results = run_specs(app, [s for _, s in todo], repeats, jobs,
+                            substrate=substrate)
         for (h, s), res in zip(todo, results):
             rec = _make_record(app, s, res, exact)
             fresh[h] = rec

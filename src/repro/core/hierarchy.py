@@ -81,7 +81,6 @@ def vote(mask: jnp.ndarray, level: Level,
 def tile_vote_2d(mask: jnp.ndarray, tile_shape: Tuple[int, int] = TILE_SHAPE) -> jnp.ndarray:
     """2-D tile vote used inside Pallas kernels where the decision unit is a
     (sublane, lane) = (8, 128) VREG tile."""
-    r, c = mask.shape[-2:], None
     th, tw = tile_shape
     h, w = mask.shape[-2], mask.shape[-1]
     if h % th or w % tw:

@@ -180,7 +180,8 @@ def propose_candidates(records: Sequence[RecordLike], *,
 def refine(app: ApproxApp, records: Sequence[RecordLike], *,
            budget: int = 16, rounds: int = 2, repeats: int = 1, eta: int = 2,
            jobs: int = 1, db_path: Optional[str] = None,
-           use_modeled: bool = False, verbose: bool = False) -> List[Record]:
+           use_modeled: bool = False, verbose: bool = False,
+           substrate: Optional[str] = None) -> List[Record]:
     """Front-guided adaptive densification (successive-halving style).
 
     Starting from coarse-grid `records`, run up to `rounds` rounds; each
@@ -188,6 +189,7 @@ def refine(app: ApproxApp, records: Sequence[RecordLike], *,
     (non-front configurations never spawn work -- the halving), evaluates at
     most the remaining budget of them via the resumable `sweep`, folds the
     results in, and raises fidelity by `eta` for the next round.
+    `substrate` scopes the ambient execution substrate for the sweeps.
 
     Returns only the newly-EXECUTED Records: candidates served from the DB
     cache fold into the working front but cost no budget and are not
@@ -210,7 +212,8 @@ def refine(app: ApproxApp, records: Sequence[RecordLike], *,
             already = {k[1] for k in db_index(load_db(db_path))
                        if k[0] == app.name and k[2] == app.workload_hash}
         recs = sweep(app, cands, repeats=fidelity, db_path=db_path,
-                     verbose=verbose, jobs=jobs, resume=True)
+                     verbose=verbose, jobs=jobs, resume=True,
+                     substrate=substrate)
         fresh = [r for r in recs if r.spec_hash not in already]
         remaining -= len(fresh)
         pool.extend(recs)

@@ -24,6 +24,13 @@ import jax.numpy as jnp
 
 from .types import PerforationKind, PerforationParams
 
+# Kinds whose knob is the (traceable) fraction; skip-driven kinds
+# (small/large) are purely structural. The single source of truth for the
+# traced-fraction dispatch decision (batching, the attention kernel's
+# masked mode, and `traced_execute_mask` below all share it).
+FRACTION_KINDS = (PerforationKind.INI, PerforationKind.FINI,
+                  PerforationKind.RANDOM)
+
 
 def _n_dropped(fraction, n_iters: int) -> int:
     """floor(fraction * n_iters) in float32 -- the substrate's compute

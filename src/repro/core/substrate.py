@@ -1,0 +1,186 @@
+"""Execution-substrate selection: host emulation vs Pallas kernels.
+
+The paper's pitch is *portable* approximation: the same pragma runs on any
+offload backend (HPAC-Offload section 2.2). This repo has two substrates
+for an approximated region:
+
+  "host"    -- the pure-jnp/numpy technique state machines (`core/taf.py`,
+               `core/iact.py`, `kernels/ref.py` oracles): bit-faithful block
+               semantics, runs anywhere, no Pallas involved.
+  "pallas"  -- the Pallas TPU kernels (`kernels/`): Mosaic-compiled on TPU,
+               interpret mode on CPU. Quality knobs (TAF rsd threshold, iACT
+               distance threshold, perforation fraction) are TRACED kernel
+               operands, so sweeps compile once per structural group and
+               batched runners vmap stacked knobs straight through.
+
+Selection is ambient with explicit override everywhere:
+
+  * the process default comes from `$REPRO_SUBSTRATE` (else "host");
+  * `use(substrate)` scopes a different choice (the harness entry points --
+    `run_specs`, `sweep`, `autotune.*`, `pareto.refine` -- take a
+    `substrate=` kwarg and evaluate inside `use(...)`);
+  * `ApproxRegion(substrate=...)` / app factories pin one explicitly;
+    `resolve(None)` reads the ambient value at call time.
+
+`dispatch` + the `*_region` evaluators below are the kernel-backed
+counterparts of the host technique entry points: spec-driven, hook-aware
+(`rsd_threshold` / `threshold` / `fraction` may be traced scalars), and
+uniform in what they return -- (output, approx_mask).
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Optional
+
+from .types import ApproxSpec, PerforationKind, Technique
+
+HOST = "host"
+PALLAS = "pallas"
+SUBSTRATES = (HOST, PALLAS)
+
+# The ambient value is DELIBERATELY a process-wide global, not a
+# ContextVar/thread-local: `run_specs(jobs>1)` evaluates specs on
+# ThreadPoolExecutor workers, which do not inherit the caller's context,
+# and those workers must see the `use(...)` scope the harness entered.
+# The trade-off: two concurrent sweeps with DIFFERENT substrates in one
+# process are unsupported -- pin the substrate on the app (e.g.
+# `make_app(substrate=...)`) instead of relying on `use()` for that case.
+_default: Optional[str] = None  # lazily read from the environment
+
+
+def _env_default() -> str:
+    sub = os.environ.get("REPRO_SUBSTRATE", HOST).strip().lower()
+    if sub not in SUBSTRATES:
+        raise ValueError(
+            f"$REPRO_SUBSTRATE={sub!r} is not one of {SUBSTRATES}")
+    return sub
+
+
+def get_default() -> str:
+    """The ambient substrate (process default or innermost `use(...)`)."""
+    global _default
+    if _default is None:
+        _default = _env_default()
+    return _default
+
+
+def set_default(substrate: str) -> None:
+    global _default
+    _default = resolve(substrate)
+
+
+def resolve(substrate: Optional[str]) -> str:
+    """Validate an explicit choice; None means the ambient default."""
+    if substrate is None:
+        return get_default()
+    if substrate not in SUBSTRATES:
+        raise ValueError(
+            f"unknown substrate {substrate!r}; expected one of {SUBSTRATES}")
+    return substrate
+
+
+@contextlib.contextmanager
+def use(substrate: Optional[str]):
+    """Scope the ambient substrate. `use(None)` is a no-op scope, so harness
+    entry points can wrap evaluation unconditionally."""
+    global _default
+    if substrate is None:
+        yield get_default()
+        return
+    prev = get_default()
+    _default = resolve(substrate)
+    try:
+        yield _default
+    finally:
+        _default = prev
+
+
+# ----------------------------------------------------------------------------
+# Kernel-backed region evaluators (the "pallas" side of the dispatch)
+# ----------------------------------------------------------------------------
+# Imports of repro.kernels happen inside the functions: this module is
+# imported by core/harness.py at package-init time and must stay light.
+
+def taf_matmul_region(x, w, spec: ApproxSpec, *, block_m: int, block_n: int,
+                      rsd_threshold=None, interpret: Optional[bool] = None):
+    """TAF-memoized projection y = x @ w under `spec.taf`.
+
+    `rsd_threshold` is the traced hook overriding the spec's static value.
+    Returns (y, approx_mask (num_i, num_j) bool).
+    """
+    from repro.kernels import ops
+    if spec.technique != Technique.TAF:
+        raise ValueError(f"taf_matmul_region needs a TAF spec, got {spec}")
+    p = spec.taf
+    th = p.rsd_threshold if rsd_threshold is None else rsd_threshold
+    return ops.taf_matmul(x, w, block_m=block_m, block_n=block_n,
+                          history_size=p.history_size,
+                          prediction_size=p.prediction_size,
+                          rsd_threshold=th, interpret=interpret)
+
+
+def iact_ffn_region(x, w1, w2, spec: ApproxSpec, *, block_rows: int,
+                    threshold=None, interpret: Optional[bool] = None):
+    """iACT-memoized FFN tile y = gelu(x @ w1) @ w2 under `spec.iact`.
+
+    `threshold` is the traced hook. The kernel serves one table per row
+    block (the paper's shared-memory table); `tables_per_block` other than
+    its structural meaning of "state shape" is not re-partitioned here.
+    Returns (y, block_approx_mask (num_blocks,) bool).
+    """
+    from repro.kernels import ops
+    if spec.technique != Technique.IACT:
+        raise ValueError(f"iact_ffn_region needs an IACT spec, got {spec}")
+    p = spec.iact
+    th = p.threshold if threshold is None else threshold
+    return ops.iact_rowfn(x, w1, w2, block_rows=block_rows,
+                          table_size=p.table_size, threshold=th,
+                          interpret=interpret)
+
+
+def attention_region(q, k, v, spec: Optional[ApproxSpec], *, block_q: int,
+                     block_kv: int, fraction=None, causal: bool = True,
+                     interpret: Optional[bool] = None):
+    """(Perforated) flash attention under `spec.perforation` (None = exact).
+
+    `fraction` is the traced hook (ini/fini/random kinds only: it flips the
+    kernel into masked mode). Returns (o, kept_block_mask (nkv,) bool) where
+    the mask marks KV blocks that were EXECUTED (False = dropped).
+    """
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from . import perforation as perfo_mod
+    nkv = k.shape[2] // block_kv
+    if spec is None or spec.technique == Technique.NONE:
+        o = ops.flash_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                                causal=causal, interpret=interpret)
+        return o, jnp.ones((nkv,), bool)
+    if spec.technique != Technique.PERFORATION:
+        raise ValueError(
+            f"attention_region needs a perforation spec, got {spec}")
+    p = spec.perforation
+    o = ops.perforated_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+                                 perfo=p, fraction=fraction, causal=causal,
+                                 interpret=interpret)
+    if fraction is not None:
+        mask = perfo_mod.traced_execute_mask(nkv, p, fraction)
+    else:
+        mask = jnp.asarray(perfo_mod.execute_mask(nkv, p))
+    return o, mask
+
+
+_REGIONS = {
+    Technique.TAF: taf_matmul_region,
+    Technique.IACT: iact_ffn_region,
+    Technique.PERFORATION: attention_region,
+}
+
+
+def dispatch(technique: Technique):
+    """The kernel-backed region evaluator for `technique` (KeyError-free)."""
+    fn = _REGIONS.get(technique)
+    if fn is None:
+        raise ValueError(
+            f"no pallas region evaluator for technique {technique}")
+    return fn

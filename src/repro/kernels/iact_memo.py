@@ -14,6 +14,11 @@ Faithful mechanics:
     matmuls are genuinely skipped via ``@pl.when``;
   * accurate path + write phase: a SINGLE writer -- the row with the largest
     distance from any table value -- inserts at the round-robin cursor.
+
+The distance threshold is a **traced** scalar-prefetch operand: only the
+structural parameters (block_rows, table_size, layer widths) shape the
+compiled program, so a threshold sweep compiles once per structural group
+and stacked thresholds ``jax.vmap`` straight through (docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -28,10 +33,10 @@ from jax.experimental.pallas import tpu as pltpu
 _BIG = 3.4e38  # python float: jnp constants would be captured by the kernel
 
 
-def _iact_kernel(x_ref, w1_ref, w2_ref, o_ref, mask_ref,
-                 keys_ref, vals_ref, meta_ref, *,
-                 table_size: int, threshold: float):
+def _iact_kernel(thresh_ref, x_ref, w1_ref, w2_ref, o_ref, mask_ref,
+                 keys_ref, vals_ref, meta_ref, *, table_size: int):
     b = pl.program_id(0)
+    threshold = thresh_ref[0]
 
     @pl.when(b == 0)
     def _reset():
@@ -87,12 +92,16 @@ def _iact_kernel(x_ref, w1_ref, w2_ref, o_ref, mask_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "block_rows", "table_size", "threshold", "out_dtype", "interpret"))
+    "block_rows", "table_size", "out_dtype", "interpret"))
 def iact_rowfn(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, *,
                block_rows: int = 128, table_size: int = 4,
-               threshold: float = 0.5, out_dtype=jnp.float32,
+               threshold=0.5, out_dtype=jnp.float32,
                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (y (N, d_out), block_approx_mask (num_blocks,) bool)."""
+    """Returns (y (N, d_out), block_approx_mask (num_blocks,) bool).
+
+    `threshold` may be a Python float or a traced scalar: it rides in scalar
+    memory and never shapes the compiled program.
+    """
     n, d_in = x.shape
     d_h = w1.shape[1]
     d_out = w2.shape[1]
@@ -100,29 +109,33 @@ def iact_rowfn(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, *,
     assert n % block_rows == 0
     num_b = n // block_rows
 
-    kernel = functools.partial(_iact_kernel, table_size=table_size,
-                               threshold=threshold)
-    y, mask = pl.pallas_call(
-        kernel,
+    thresh = jnp.asarray(threshold, jnp.float32).reshape((1,))
+    kernel = functools.partial(_iact_kernel, table_size=table_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=(num_b,),
         in_specs=[
-            pl.BlockSpec((block_rows, d_in), lambda b: (b, 0)),
-            pl.BlockSpec((d_in, d_h), lambda b: (0, 0)),
-            pl.BlockSpec((d_h, d_out), lambda b: (0, 0)),
+            pl.BlockSpec((block_rows, d_in), lambda b, thresh_ref: (b, 0)),
+            pl.BlockSpec((d_in, d_h), lambda b, thresh_ref: (0, 0)),
+            pl.BlockSpec((d_h, d_out), lambda b, thresh_ref: (0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((block_rows, d_out), lambda b: (b, 0)),
-            pl.BlockSpec((1,), lambda b: (b,)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((n, d_out), out_dtype),
-            jax.ShapeDtypeStruct((num_b,), jnp.int32),
+            pl.BlockSpec((block_rows, d_out), lambda b, thresh_ref: (b, 0)),
+            pl.BlockSpec((1,), lambda b, thresh_ref: (b,)),
         ],
         scratch_shapes=[
             pltpu.VMEM((table_size, d_in), jnp.float32),
             pltpu.VMEM((table_size, d_out), jnp.float32),
             pltpu.SMEM((2,), jnp.int32),
         ],
+    )
+    y, mask = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d_out), out_dtype),
+            jax.ShapeDtypeStruct((num_b,), jnp.int32),
+        ],
         interpret=interpret,
-    )(x, w1, w2)
+    )(thresh, x, w1, w2)
     return y, mask.astype(bool)

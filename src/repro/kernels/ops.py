@@ -7,6 +7,7 @@ tests and by the pure-jnp model paths.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import jax
@@ -29,6 +30,8 @@ def _interp(override: Optional[bool]) -> bool:
 def taf_matmul(x, w, *, block_m=128, block_n=128, history_size=3,
                prediction_size=8, rsd_threshold=0.5, out_dtype=jnp.float32,
                interpret: Optional[bool] = None):
+    """`rsd_threshold` is a traced operand: sweeping it reuses one compile
+    per (block shape, history_size, prediction_size) structural group."""
     return _taf_matmul(x, w, block_m=block_m, block_n=block_n,
                        history_size=history_size,
                        prediction_size=prediction_size,
@@ -38,6 +41,8 @@ def taf_matmul(x, w, *, block_m=128, block_n=128, history_size=3,
 
 def iact_rowfn(x, w1, w2, *, block_rows=128, table_size=4, threshold=0.5,
                out_dtype=jnp.float32, interpret: Optional[bool] = None):
+    """`threshold` is a traced operand: sweeping it reuses one compile per
+    (block_rows, table_size, widths) structural group."""
     return _iact_rowfn(x, w1, w2, block_rows=block_rows,
                        table_size=table_size, threshold=threshold,
                        out_dtype=out_dtype, interpret=_interp(interpret))
@@ -54,11 +59,21 @@ def perforated_matmul(x, w, *, block_m=128, block_n=128, block_k=128,
 
 def perforated_attention(q, k, v, *, block_q=128, block_kv=128,
                          perfo: Optional[PerforationParams] = None,
-                         causal=True, scale: Optional[float] = None,
+                         fraction=None, causal=True,
+                         scale: Optional[float] = None,
                          interpret: Optional[bool] = None):
+    """`fraction` is the traced hook for ini/fini/random perforation: when
+    set, the kernel's masked mode gates KV blocks from an in-trace liveness
+    vector and one compiled program serves any fraction."""
+    if fraction is not None and perfo is not None:
+        # Masked mode ignores perfo.fraction (the traced operand carries
+        # it), but perfo is a static jit arg: normalize the dead field so
+        # the natural sweep pattern -- a fresh PerforationParams per grid
+        # point -- still hits one compile.
+        perfo = dataclasses.replace(perfo, fraction=0.0)
     return _perf_attention(q, k, v, block_q=block_q, block_kv=block_kv,
-                           perfo=perfo, causal=causal, scale=scale,
-                           interpret=_interp(interpret))
+                           perfo=perfo, fraction=fraction, causal=causal,
+                           scale=scale, interpret=_interp(interpret))
 
 
 def flash_attention(q, k, v, *, block_q=128, block_kv=128, causal=True,

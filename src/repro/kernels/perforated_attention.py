@@ -1,19 +1,35 @@
 """Flash attention with herded KV-block perforation (paper section 3.1.5 -> TPU).
 
-Online-softmax flash attention over a (B, H, num_q, n_kept_kv) grid whose KV
-dimension enumerates only the KEPT blocks: the same KV blocks are dropped for
-every query tile, batch and head -- herded perforation. `ini` drops the
-oldest context, `fini` the newest; `small`/`large` give strided context
-sparsity. With `perfo=None` this is a standard causal flash-attention kernel
-(our full-attention baseline), and with `ini` fractions it degenerates into a
-sliding-window: the sub-quadratic mode used by long-context configs.
+Online-softmax flash attention over a (B, H, num_q, n_enum) grid whose KV
+dimension enumerates perforated context blocks: the same KV blocks are
+dropped for every query tile, batch and head -- herded perforation. `ini`
+drops the oldest context, `fini` the newest; `small`/`large` give strided
+context sparsity. With `perfo=None` this is a standard causal
+flash-attention kernel (our full-attention baseline), and with `ini`
+fractions it degenerates into a sliding-window: the sub-quadratic mode used
+by long-context configs.
 
-The kept-block list arrives via TPU scalar prefetch so index maps and the
-causal mask read ``kept_ref[kk]``. GQA is handled in the index map (kv head =
-q head // group); no KV repeat is materialized. Scratch m/l/acc implement the
-numerically-safe online softmax; a causal early-out ``@pl.when`` skips KV
-blocks entirely above the diagonal (uniform across the tile -> genuinely
-free, the same argument as herding).
+Two perforation modes share one kernel body:
+
+  * **structural** (`fraction=None`): the kept-block list is computed on the
+    host from the static `perfo` params and the grid enumerates ONLY the
+    kept blocks -- dropped blocks are never visited (the herded payoff).
+  * **masked** (`fraction=` a possibly-traced scalar; ini/fini/random
+    kinds): the grid enumerates ALL KV blocks and a per-block liveness
+    vector -- computed in-trace from the traced fraction -- gates each
+    block's work under ``@pl.when``. The compiled program is shaped only by
+    the block geometry, so a fraction sweep compiles once and stacked
+    fractions ``jax.vmap`` straight through (docs/kernels.md). This is the
+    kernel-level analogue of `perforated_loop(fraction=...)`'s masked
+    variant: blocks still iterate, their compute is skipped.
+
+Both the kept-block list and the liveness vector arrive via TPU scalar
+prefetch so index maps and the causal mask read ``kept_ref[kk]``. GQA is
+handled in the index map (kv head = q head // group); no KV repeat is
+materialized. Scratch m/l/acc implement the numerically-safe online
+softmax; a causal early-out ``@pl.when`` skips KV blocks entirely above the
+diagonal (uniform across the tile -> genuinely free, the same argument as
+herding).
 """
 from __future__ import annotations
 
@@ -26,15 +42,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.perforation import kept_indices
+from repro.core.perforation import (FRACTION_KINDS, kept_indices,
+                                    traced_execute_mask)
 from repro.core.types import PerforationParams
 
 _NEG = -1e30  # python float: jnp constants would be captured by the kernel
 
 
-def _attn_kernel(kept_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+def _attn_kernel(kept_ref, live_ref, q_ref, k_ref, v_ref, o_ref,
+                 m_ref, l_ref, acc_ref,
                  *, block_q: int, block_kv: int, offset: int, scale: float,
-                 causal: bool, n_kept: int):
+                 causal: bool, n_enum: int):
     iq = pl.program_id(2)
     kk = pl.program_id(3)
     kid = kept_ref[kk]
@@ -49,6 +67,7 @@ def _attn_kernel(kept_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     last_q_global = iq * block_q + offset + block_q - 1
     block_live = jnp.logical_or(
         jnp.asarray(not causal), kid * block_kv <= last_q_global)
+    block_live = jnp.logical_and(block_live, live_ref[kk] > 0)
 
     @pl.when(block_live)
     def _process():
@@ -76,7 +95,7 @@ def _attn_kernel(kept_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         m_ref[:, 0] = m_new
         l_ref[:, 0] = l_new
 
-    @pl.when(kk == n_kept - 1)
+    @pl.when(kk == n_enum - 1)
     def _finalize():
         l = l_ref[:, 0]
         safe = jnp.maximum(l, 1e-30)
@@ -90,6 +109,7 @@ def _attn_kernel(kept_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                          block_q: int = 128, block_kv: int = 128,
                          perfo: Optional[PerforationParams] = None,
+                         fraction=None,
                          causal: bool = True,
                          scale: Optional[float] = None,
                          interpret: bool = False) -> jnp.ndarray:
@@ -98,6 +118,12 @@ def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     Returns (B, Hq, Sq, D) in q.dtype. Queries sit at the END of the KV
     timeline (offset = Skv - Sq), covering self-attention, chunked prefill
     and single-token decode.
+
+    `fraction` is the traced-parameter hook: a (possibly traced) scalar
+    overriding ``perfo.fraction`` for the fraction-driven kinds
+    (ini/fini/random). When set, the kernel runs in MASKED mode -- the grid
+    enumerates every KV block and a liveness vector computed in-trace gates
+    the dropped ones -- so the same compiled program serves any fraction.
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, dk = k.shape
@@ -105,33 +131,46 @@ def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     assert sq % block_q == 0 and skv % block_kv == 0
     group = hq // hkv
     nkv = skv // block_kv
-    kept = np.arange(nkv) if perfo is None else kept_indices(nkv, perfo)
-    if len(kept) == 0:
-        raise ValueError("perforation dropped every KV block")
-    kept_arr = jnp.asarray(kept, jnp.int32)
-    n_kept = len(kept)
+    if fraction is not None:
+        if perfo is None or perfo.kind not in FRACTION_KINDS:
+            raise ValueError(
+                "fraction is a traced hook for ini/fini/random perforation; "
+                f"got perfo={perfo}")
+        # Masked mode: enumerate every KV block; liveness is data.
+        kept_arr = jnp.arange(nkv, dtype=jnp.int32)
+        live_arr = traced_execute_mask(nkv, perfo, fraction).astype(jnp.int32)
+        n_enum = nkv
+    else:
+        kept = np.arange(nkv) if perfo is None else kept_indices(nkv, perfo)
+        if len(kept) == 0:
+            raise ValueError("perforation dropped every KV block")
+        kept_arr = jnp.asarray(kept, jnp.int32)
+        live_arr = jnp.ones((len(kept),), jnp.int32)
+        n_enum = len(kept)
     offset = skv - sq
     scale = scale if scale is not None else float(1.0 / np.sqrt(d))
 
     kernel = functools.partial(
         _attn_kernel, block_q=block_q, block_kv=block_kv, offset=offset,
-        scale=scale, causal=causal, n_kept=n_kept)
+        scale=scale, causal=causal, n_enum=n_enum)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(b, hq, sq // block_q, n_kept),
+        num_scalar_prefetch=2,
+        grid=(b, hq, sq // block_q, n_enum),
         in_specs=[
             pl.BlockSpec((1, 1, block_q, d),
-                         lambda bb, h, iq, kk, kept_ref: (bb, h, iq, 0)),
+                         lambda bb, h, iq, kk, kept_ref, live_ref:
+                         (bb, h, iq, 0)),
             pl.BlockSpec((1, 1, block_kv, d),
-                         lambda bb, h, iq, kk, kept_ref:
+                         lambda bb, h, iq, kk, kept_ref, live_ref:
                          (bb, h // group, kept_ref[kk], 0)),
             pl.BlockSpec((1, 1, block_kv, d),
-                         lambda bb, h, iq, kk, kept_ref:
+                         lambda bb, h, iq, kk, kept_ref, live_ref:
                          (bb, h // group, kept_ref[kk], 0)),
         ],
         out_specs=pl.BlockSpec((1, 1, block_q, d),
-                               lambda bb, h, iq, kk, kept_ref: (bb, h, iq, 0)),
+                               lambda bb, h, iq, kk, kept_ref, live_ref:
+                               (bb, h, iq, 0)),
         scratch_shapes=[
             pltpu.VMEM((block_q, 1), jnp.float32),
             pltpu.VMEM((block_q, 1), jnp.float32),
@@ -143,4 +182,4 @@ def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         interpret=interpret,
-    )(kept_arr, q, k, v)
+    )(kept_arr, live_arr, q, k, v)

@@ -16,6 +16,12 @@ The decision is **block-level** (paper `level(team)`): a scalar predicate
 drives ``@pl.when``, so an approximated tile genuinely skips its MXU dot --
 the divergence-free fast path that element-level masking cannot give on a
 vector machine (DESIGN.md section 2).
+
+The RSD threshold is a **traced** scalar-prefetch operand, not a static jit
+argument: the compiled program is shaped only by the structural parameters
+(block shape, history/prediction sizes), so a threshold sweep reuses one
+executable per structural group and a batched runner can ``jax.vmap``
+stacked thresholds straight through the kernel (docs/kernels.md).
 """
 from __future__ import annotations
 
@@ -28,13 +34,13 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _taf_matmul_kernel(x_ref, w_ref, o_ref, mask_ref,
+def _taf_matmul_kernel(thresh_ref, x_ref, w_ref, o_ref, mask_ref,
                        window_ref, counters_ref, memo_ref, *,
-                       history_size: int, prediction_size: int,
-                       rsd_threshold: float):
+                       history_size: int, prediction_size: int):
     j = pl.program_id(0)  # column block (slow axis)
     i = pl.program_id(1)  # row block (fast axis) -- the temporal sequence
     del j
+    rsd_threshold = thresh_ref[0]
 
     @pl.when(i == 0)
     def _reset():  # kernel-lifetime state scope, fresh per column block
@@ -75,44 +81,53 @@ def _taf_matmul_kernel(x_ref, w_ref, o_ref, mask_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "block_m", "block_n", "history_size", "prediction_size", "rsd_threshold",
+    "block_m", "block_n", "history_size", "prediction_size",
     "out_dtype", "interpret"))
 def taf_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
                block_n: int = 128, history_size: int = 3,
-               prediction_size: int = 8, rsd_threshold: float = 0.5,
+               prediction_size: int = 8, rsd_threshold=0.5,
                out_dtype=jnp.float32,
                interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (y (M, N), approx_mask (num_i, num_j) int32)."""
+    """Returns (y (M, N), approx_mask (num_i, num_j) int32).
+
+    `rsd_threshold` may be a Python float or a traced scalar: it rides in
+    scalar memory and never shapes the compiled program.
+    """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2, (x.shape, w.shape)
     assert m % block_m == 0 and n % block_n == 0
     num_i, num_j = m // block_m, n // block_n
 
+    thresh = jnp.asarray(rsd_threshold, jnp.float32).reshape((1,))
     grid = (num_j, num_i)  # j slow, i fast: temporal sequence over row blocks
     kernel = functools.partial(
         _taf_matmul_kernel, history_size=history_size,
-        prediction_size=prediction_size, rsd_threshold=rsd_threshold)
-    y, mask = pl.pallas_call(
-        kernel,
+        prediction_size=prediction_size)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_m, k), lambda j, i: (i, 0)),
-            pl.BlockSpec((k, block_n), lambda j, i: (0, j)),
+            pl.BlockSpec((block_m, k), lambda j, i, thresh_ref: (i, 0)),
+            pl.BlockSpec((k, block_n), lambda j, i, thresh_ref: (0, j)),
         ],
         out_specs=[
-            pl.BlockSpec((block_m, block_n), lambda j, i: (i, j)),
-            pl.BlockSpec((1, 1), lambda j, i: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, n), out_dtype),
-            jax.ShapeDtypeStruct((num_i, num_j), jnp.int32),
+            pl.BlockSpec((block_m, block_n), lambda j, i, thresh_ref: (i, j)),
+            pl.BlockSpec((1, 1), lambda j, i, thresh_ref: (i, j)),
         ],
         scratch_shapes=[
             pltpu.VMEM((1, history_size), jnp.float32),
             pltpu.SMEM((2,), jnp.int32),
             pltpu.VMEM((block_m, block_n), jnp.float32),
         ],
+    )
+    y, mask = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((m, n), out_dtype),
+            jax.ShapeDtypeStruct((num_i, num_j), jnp.int32),
+        ],
         interpret=interpret,
-    )(x, w)
+    )(thresh, x, w)
     return y, mask.astype(bool)

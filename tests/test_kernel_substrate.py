@@ -1,0 +1,346 @@
+"""Kernel-substrate tests: host-vs-pallas parity, traced quality knobs, and
+the no-recompile-per-sweep-point regression.
+
+The kernels' quality knobs (TAF rsd threshold, iACT distance threshold,
+perforation fraction) are TRACED operands: a threshold grid must compile
+each kernel at most once per structural group (block shape + state-shaping
+params), and the kernel results in interpret mode must match the ref.py
+oracles -- which double as the approx_ffn app's "host" substrate -- bit for
+bit on the approx masks.
+"""
+import os
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import substrate
+from repro.core.approx import ApproxRegion
+from repro.core.harness import iact_grid, run_specs, sweep, taf_grid
+from repro.core.types import (ApproxSpec, IACTParams, Level, PerforationKind,
+                              PerforationParams, TAFParams, Technique)
+from repro.kernels import ops, ref
+from repro.kernels.iact_memo import iact_rowfn as _iact_jit
+from repro.kernels.taf_matmul import taf_matmul as _taf_jit
+from repro.kernels.perforated_attention import (perforated_attention as
+                                                _attn_jit)
+
+sys.path.insert(0, os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "examples"))
+
+from apps import approx_ffn  # noqa: E402
+
+
+def _rowblock_x(rng, m, k, block=16, noise=0.02):
+    base = rng.randn(1, k).astype(np.float32)
+    return np.tile(base, (m, 1)) + noise * rng.randn(m, k).astype(np.float32)
+
+
+# --------------------------------------------------------------- substrate
+
+
+class TestSubstrateSelection:
+    def test_resolve_and_use(self):
+        assert substrate.resolve(None) == substrate.get_default()
+        assert substrate.resolve("pallas") == "pallas"
+        with substrate.use("pallas"):
+            assert substrate.get_default() == "pallas"
+            with substrate.use(None):  # no-op scope
+                assert substrate.get_default() == "pallas"
+        assert substrate.get_default() == "host"
+
+    def test_rejects_unknown(self):
+        with pytest.raises(ValueError, match="unknown substrate"):
+            substrate.resolve("cuda")
+
+    def test_use_restores_on_error(self):
+        with pytest.raises(RuntimeError):
+            with substrate.use("pallas"):
+                raise RuntimeError("boom")
+        assert substrate.get_default() == "host"
+
+    def test_dispatch(self):
+        assert substrate.dispatch(Technique.TAF) is substrate.taf_matmul_region
+        with pytest.raises(ValueError, match="no pallas region"):
+            substrate.dispatch(Technique.NONE)
+
+
+# --------------------------------------------- traced knobs: recompile-free
+
+
+class TestTracedKnobsNoRecompile:
+    def test_taf_threshold_grid_single_trace(self):
+        """A 16-point rsd-threshold grid costs at most ONE kernel compile
+        per structural group (the acceptance-criterion regression)."""
+        rng = np.random.RandomState(0)
+        x = jnp.asarray(_rowblock_x(rng, 128, 32, noise=0.05))
+        w = jnp.asarray(rng.randn(32, 32).astype(np.float32))
+        thresholds = np.geomspace(1e-5, 4.0, 16)
+        # group 1: history_size=3
+        ops.taf_matmul(x, w, block_m=32, block_n=32, rsd_threshold=0.5)
+        base = _taf_jit._cache_size()
+        masks = []
+        for t in thresholds:
+            _, m = ops.taf_matmul(x, w, block_m=32, block_n=32,
+                                  rsd_threshold=float(t))
+            masks.append(np.asarray(m))
+        assert _taf_jit._cache_size() - base == 0
+        assert not np.array_equal(masks[0], masks[-1])  # knob is live
+        # a different structural group costs exactly one more trace
+        ops.taf_matmul(x, w, block_m=32, block_n=32, history_size=2,
+                       rsd_threshold=0.5)
+        grew = _taf_jit._cache_size() - base
+        assert grew == 1
+
+    def test_iact_threshold_grid_single_trace(self):
+        rng = np.random.RandomState(1)
+        x = jnp.asarray(np.repeat(rng.randn(4, 16), 32, 0).astype(np.float32))
+        w1 = jnp.asarray(rng.randn(16, 32).astype(np.float32) * 0.1)
+        w2 = jnp.asarray(rng.randn(32, 8).astype(np.float32) * 0.1)
+        ops.iact_rowfn(x, w1, w2, block_rows=32, threshold=0.5)
+        base = _iact_jit._cache_size()
+        for t in np.linspace(0.01, 5.0, 16):
+            ops.iact_rowfn(x, w1, w2, block_rows=32, threshold=float(t))
+        assert _iact_jit._cache_size() - base == 0
+
+    def test_attention_fraction_grid_single_trace(self):
+        """The natural sweep pattern -- a FRESH PerforationParams per grid
+        point -- must still hit one compile: masked mode normalizes the
+        dead `fraction` field out of the static jit key."""
+        rng = np.random.RandomState(2)
+        q = jnp.asarray(rng.randn(1, 2, 64, 16).astype(np.float32))
+        k = jnp.asarray(rng.randn(1, 2, 64, 16).astype(np.float32))
+        ops.perforated_attention(
+            q, k, k, block_q=32, block_kv=32,
+            perfo=PerforationParams(kind=PerforationKind.INI, fraction=0.5),
+            fraction=0.25)
+        base = _attn_jit._cache_size()
+        for fr in np.linspace(0.0, 0.9, 16):
+            p = PerforationParams(kind=PerforationKind.INI,
+                                  fraction=float(fr) if fr else 0.1)
+            ops.perforated_attention(q, k, k, block_q=32, block_kv=32,
+                                     perfo=p, fraction=float(fr))
+        assert _attn_jit._cache_size() - base == 0
+
+    def test_vmap_stacks_thresholds_through_kernel(self):
+        """The batched-runner protocol's kernel leg: stacked thresholds
+        vmap through one compiled kernel, lane-for-lane equal to serial."""
+        rng = np.random.RandomState(3)
+        x = jnp.asarray(_rowblock_x(rng, 64, 16))
+        w = jnp.asarray(rng.randn(16, 16).astype(np.float32))
+        ths = jnp.asarray([0.05, 0.5, 2.0], jnp.float32)
+        ys, masks = jax.jit(jax.vmap(
+            lambda th: _taf_jit(x, w, block_m=16, block_n=16,
+                                rsd_threshold=th, interpret=True)))(ths)
+        for i, t in enumerate(np.asarray(ths)):
+            y1, m1 = ops.taf_matmul(x, w, block_m=16, block_n=16,
+                                    rsd_threshold=float(t))
+            np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(y1),
+                                       atol=1e-5)
+            assert np.array_equal(np.asarray(masks[i]), np.asarray(m1))
+
+
+# ------------------------------------------------ masked attention parity
+
+
+class TestMaskedAttention:
+    @pytest.mark.parametrize("kind,fr", [
+        (PerforationKind.INI, 0.25), (PerforationKind.INI, 0.5),
+        (PerforationKind.FINI, 0.25), (PerforationKind.RANDOM, 0.5),
+    ])
+    def test_traced_fraction_matches_structural(self, kind, fr):
+        rng = np.random.RandomState(4)
+        q = jnp.asarray(rng.randn(1, 2, 64, 16).astype(np.float32))
+        k = jnp.asarray(rng.randn(1, 2, 128, 16).astype(np.float32))
+        v = jnp.asarray(rng.randn(1, 2, 128, 16).astype(np.float32))
+        p = PerforationParams(kind=kind, fraction=fr)
+        o_struct = ops.perforated_attention(q, k, v, block_q=32, block_kv=32,
+                                            perfo=p)
+        o_masked = ops.perforated_attention(q, k, v, block_q=32, block_kv=32,
+                                            perfo=p, fraction=fr)
+        np.testing.assert_allclose(np.asarray(o_masked),
+                                   np.asarray(o_struct), atol=1e-5)
+
+    def test_fraction_hook_needs_fraction_kind(self):
+        rng = np.random.RandomState(5)
+        q = jnp.asarray(rng.randn(1, 1, 32, 16).astype(np.float32))
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=2)
+        with pytest.raises(ValueError, match="traced hook"):
+            ops.perforated_attention(q, q, q, block_q=32, block_kv=32,
+                                     perfo=p, fraction=0.5)
+
+
+# -------------------------------------------- ApproxRegion substrate plumb
+
+
+class TestApproxRegionSubstrate:
+    def _region(self, **kw):
+        rng = np.random.RandomState(6)
+        x = jnp.asarray(_rowblock_x(rng, 64, 16))
+        w = jnp.asarray(rng.randn(16, 16).astype(np.float32))
+        spec = ApproxSpec(Technique.TAF, Level.BLOCK,
+                          taf=TAFParams(3, 4, 0.5))
+
+        def pallas_impl(_x, rsd_threshold=None, threshold=None):
+            return substrate.taf_matmul_region(
+                x, w, spec, block_m=16, block_n=16,
+                rsd_threshold=rsd_threshold)
+
+        region = ApproxRegion(spec, lambda: x @ w, n_elements=64,
+                              pallas_impl=pallas_impl, **kw)
+        return region, x, w
+
+    def test_pinned_pallas_substrate(self):
+        region, x, w = self._region(substrate="pallas")
+        out, state, mask = region.step(())
+        yr, mr = ref.taf_matmul_ref(x, w, block_m=16, block_n=16,
+                                    history_size=3, prediction_size=4,
+                                    rsd_threshold=0.5)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(yr), atol=1e-3)
+        assert np.array_equal(np.asarray(mask), np.asarray(mr))
+
+    def test_ambient_substrate_flips_region(self):
+        region, x, w = self._region()  # substrate=None -> ambient
+        with substrate.use("pallas"):
+            out, _, mask = region.step(())
+        assert np.asarray(mask).ndim == 2  # kernel's (num_i, num_j) mask
+        # run(): one kernel call is the sequence; hook overrides the spec
+        with substrate.use("pallas"):
+            ys, frac = region.run(x, rsd_threshold=0.0)
+        assert float(frac) == 0.0  # zero threshold never approximates
+
+    def test_pallas_without_impl_raises(self):
+        spec = ApproxSpec(Technique.TAF, Level.BLOCK)
+        region = ApproxRegion(spec, lambda: 0, n_elements=4,
+                              substrate="pallas")
+        with pytest.raises(ValueError, match="needs a pallas_impl"):
+            region.step(())
+
+    def test_exact_region_runs_on_pallas_substrate(self):
+        """Technique.NONE has no kernel side: an exact-baseline region must
+        run its fn on the pallas substrate without a pallas_impl."""
+        xs = jnp.ones((4, 2))
+        region = ApproxRegion(ApproxSpec(), lambda x: x * 2.0, n_elements=4,
+                              substrate="pallas")
+        out, _, mask = region.step((), xs)
+        np.testing.assert_allclose(np.asarray(out), 2.0)
+        assert not np.asarray(mask).any()
+        with substrate.use("pallas"):
+            ys, frac = ApproxRegion(ApproxSpec(), lambda x: x + 1.0,
+                                    n_elements=2).run(jnp.zeros((3, 2)))
+        assert float(frac) == 0.0
+
+
+# ------------------------------------------------- app host/pallas parity
+
+
+def _parity_grid():
+    taf = taf_grid(h_sizes=(3,), p_sizes=(2,),
+                   thresholds=(0.02, 0.1, 1.0), levels=(Level.BLOCK,))
+    iact = iact_grid(t_sizes=(4,), thresholds=(0.05, 0.5, 20.0),
+                     tables_per_block=(1,), levels=(Level.BLOCK,))
+    perfo = [ApproxSpec(Technique.PERFORATION, Level.BLOCK,
+                        perforation=PerforationParams(kind=k, fraction=f))
+             for k, f in ((PerforationKind.INI, 0.25),
+                          (PerforationKind.FINI, 0.5))]
+    return taf + iact + perfo
+
+
+class TestApproxFFNParity:
+    def test_host_vs_pallas_masks_and_qoi(self):
+        """The tentpole parity contract: over TAF/iACT/perforation grids the
+        pallas substrate (interpret mode on CPU) must reproduce the host
+        substrate's approx masks exactly and its QoI within fp tolerance."""
+        grid = _parity_grid()
+        papp = approx_ffn.make_app(substrate="pallas")
+        happ = approx_ffn.make_app(substrate="host")
+        precs = sweep(papp, grid, repeats=1)
+        hrecs = sweep(happ, grid, repeats=1)
+        assert papp.workload_hash != happ.workload_hash  # distinct DB keys
+        for p, h in zip(precs, hrecs):
+            assert p.extra["approx_mask"] == h.extra["approx_mask"], p.spec
+            assert abs(p.error - h.error) < 1e-4, p.spec
+            assert abs(p.approx_fraction - h.approx_fraction) < 1e-6
+
+    def test_thresholds_discriminate(self):
+        """The sweep must not be flat: different thresholds produce
+        different approximation fractions somewhere in the grid."""
+        papp = approx_ffn.make_app(substrate="pallas")
+        recs = run_specs(papp, _parity_grid(), repeats=1)
+        fracs = {round(r.approx_fraction, 6) for r in recs}
+        assert len(fracs) > 2
+
+    def test_batched_runner_matches_serial(self):
+        grid = _parity_grid()
+        papp = approx_ffn.make_app(substrate="pallas")
+        serial = run_specs(papp, grid, repeats=1, jobs=1)
+        batched = run_specs(papp, grid, repeats=1, jobs=len(grid))
+        for s, b in zip(serial, batched):
+            np.testing.assert_allclose(np.asarray(b.qoi), np.asarray(s.qoi),
+                                       rtol=1e-5, atol=1e-6)
+            assert s.extra["approx_mask"] == b.extra["approx_mask"]
+            assert abs(s.approx_fraction - b.approx_fraction) < 1e-6
+            assert abs(s.flop_fraction - b.flop_fraction) < 1e-6
+
+    def test_app_level_one_compile_per_structural_group(self):
+        """Sweeping a 16-point threshold grid through the pallas-substrate
+        app compiles each kernel-backed pipeline at most once per
+        structural group (2 groups here), serial or batched."""
+        papp = approx_ffn.make_app(substrate="pallas")
+        grid = taf_grid(h_sizes=(2, 3), p_sizes=(2,),
+                        thresholds=(0.01, 0.02, 0.05, 0.1, 0.2, 0.5, 1.0,
+                                    2.0),
+                        levels=(Level.BLOCK,))
+        assert len(grid) == 16
+        run_specs(papp, grid[:1], repeats=1)  # pin workload arrays
+        runners = {}
+        from repro.core import batching
+        for s in grid:
+            key = batching.static_key(s)
+            runners[key] = approx_ffn._pallas_knob_runner(
+                key, *[papp.workload[k]
+                       for k in ("seq", "d", "d_h", "heads", "seed")])
+        assert len(runners) == 2
+        before = {k: fn._cache_size() for k, fn in runners.items()}
+        run_specs(papp, grid, repeats=1)  # serial sweep
+        after = {k: fn._cache_size() for k, fn in runners.items()}
+        for k in runners:
+            assert after[k] - before[k] <= 1, (k, before[k], after[k])
+        # and sweeping again (any order, any thresholds) adds nothing
+        run_specs(papp, grid[::-1], repeats=1)
+        assert {k: fn._cache_size() for k, fn in runners.items()} == after
+
+
+# -------------------------------------------------- harness substrate kwarg
+
+
+class TestHarnessSubstratePlumbing:
+    def test_run_specs_scopes_ambient_substrate(self):
+        seen = []
+
+        def run(spec):
+            seen.append(substrate.get_default())
+            return AppResultStub()
+
+        class AppResultStub:
+            qoi = np.zeros((2,))
+            wall_time_s = 1.0
+            approx_fraction = 0.0
+            flop_fraction = 1.0
+            extra = {}
+
+        from repro.core.harness import ApproxApp
+        app = ApproxApp("probe", run)
+        run_specs(app, [ApproxSpec()], repeats=1, substrate="pallas")
+        assert seen == ["pallas"]
+        assert substrate.get_default() == "host"
+
+    def test_sweep_and_refine_accept_substrate(self):
+        import inspect
+        from repro.core.autotune import random_search, successive_halving
+        from repro.core.pareto import refine
+        for fn in (sweep, run_specs, refine, random_search,
+                   successive_halving):
+            assert "substrate" in inspect.signature(fn).parameters, fn
