@@ -1,0 +1,203 @@
+"""QoS-controlled serving vs precise serving on an open-loop request trace.
+
+The closed loop end to end (docs/qos.md): a resumable `harness.sweep` over
+decode-TAF thresholds builds the offline Pareto DB; `QosPolicy` turns its
+front into a ladder; a `QosEngine` serves a seeded open-loop trace (arrival
+ticks fixed up front -- load does not adapt to service rate) with canary
+monitoring and feedback control, against the same trace through a precise
+engine. Mid-run a deterministic error spike is injected into the monitor,
+so the report also exercises the hard precise fallback and the recovery.
+
+Reports throughput (tokens/s), measured canary error vs the target, the
+fallback rate, knob trajectory length, and TTFT/latency percentiles. With
+`artifacts_dir`, writes ``BENCH_qos.json`` -- the repo's first serving perf
+artifact (throughput, measured error, fallback rate, knob trajectory),
+uploaded by the fast CI job so the trajectory is diffable across commits.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import qos
+from repro.core.harness import sweep
+from repro.core.types import ApproxSpec
+from repro.models import build
+from repro.serving import Request, ServingEngine
+
+_THRESHOLDS = (0.02, 0.04, 0.06, 0.1, 0.3)
+_METRIC = "mcr"         # token-mismatch rate: bounded, the serving contract
+_TARGET = 0.10          # max one-step token-mismatch rate
+_CANARY_FRACTION = 0.25
+_N_REQUESTS = 10
+_GEN = 8
+_SPIKE_TICK = 22        # deterministic fault injection (monitor.inject),
+#                         late in the batch-only phase: the knob is open,
+#                         so the drill exercises a real back-off
+
+_SPIKE_ERROR = 10.0
+
+
+def _trace(cfg, seed: int = 0):
+    """Seeded open-loop trace: arrival tick, prompt, class per request.
+    Interactive ("default", tight bound) requests arrive first; a batch
+    tail follows, so the run exercises both the strictest-live-lane
+    actuation (precise while interactive lanes are live) and the opened
+    knob once only batch lanes remain."""
+    rng = np.random.RandomState(seed)
+    reqs = []
+    for i in range(_N_REQUESTS):
+        arrival = int(rng.randint(0, 3)) + 2 * i
+        prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
+        cls = "default" if i < _N_REQUESTS // 2 else "batch"
+        reqs.append((arrival, Request(uid=i, prompt=prompt,
+                                      max_new_tokens=_GEN, qos_class=cls)))
+    return reqs
+
+
+def _warm(engine):
+    """Compile the engine's prefill/serve (and, under QoS, the precise
+    oracle) outside the timed trace: the first tick otherwise absorbs
+    seconds of jax.jit compile into tokens_per_s, and the two engines
+    compile DIFFERENT graphs, so the throughput comparison would mostly
+    be a compile-time comparison. Pure function calls on throwaway data;
+    engine state is untouched."""
+    prompts = jnp.zeros((engine.n_slots, engine.prompt_len), jnp.int32)
+    logits, cache = engine._prefill(engine.params, {"tokens": prompts})
+    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    pos = jnp.int32(engine.prompt_len)
+    jax.block_until_ready(
+        engine._serve(engine.params, cache, tokens, pos)[0])
+    if engine._serve_exact is not None:
+        jax.block_until_ready(
+            engine._serve_exact(engine.params, cache, tokens, pos)[0])
+
+
+def _serve_trace(engine, trace, *, spike_at: Optional[int] = None):
+    """Open-loop drive: submissions happen at their arrival tick whether or
+    not the engine kept up. Returns (stats, wall_seconds)."""
+    pending = sorted(trace, key=lambda ar: ar[0])
+    t0 = time.perf_counter()
+    tick = 0
+    while pending or engine.queue or any(engine.active):
+        while pending and pending[0][0] <= tick:
+            engine.submit(pending.pop(0)[1])
+        if spike_at is not None and tick == spike_at and engine.qos:
+            engine.qos.monitor.inject(_SPIKE_ERROR)
+        engine.tick()
+        tick += 1
+        if tick > 10_000:
+            raise RuntimeError("trace did not drain")
+    return engine.stats, time.perf_counter() - t0
+
+
+def main(report, jobs: int = 1, db_path: Optional[str] = None,
+         artifacts_dir: Optional[str] = None) -> None:
+    cfg = qos.default_decode_cfg()
+
+    # 1. offline: calibrate the decode workload through the normal harness
+    #    (resumable when --db is given; one compile for the whole grid)
+    app = qos.make_decode_app(cfg, gen=12, metric=_METRIC)
+    recs = sweep(app, qos.threshold_grid(cfg, _THRESHOLDS), repeats=1,
+                 db_path=db_path, jobs=max(jobs, 1))
+    policy = qos.QosPolicy.from_records(recs, metric=_METRIC,
+                                        use_modeled=True)
+    report("qos_policy_ladder", f"{len(policy)}",
+           ";".join(f"th={e.spec.get('thresh')}:err={e.error:.3f}"
+                    for e in policy.entries[1:]) or "precise_only")
+
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    # 2. precise baseline over the same trace (same params, TAF disabled)
+    precise_model = build(dataclasses.replace(cfg,
+                                              approx_decode=ApproxSpec()))
+    precise_eng = ServingEngine(precise_model, params, slots=4, max_len=64,
+                                prompt_len=8)
+    _warm(precise_eng)
+    p_stats, p_wall = _serve_trace(precise_eng, _trace(cfg))
+
+    # 3. QoS-controlled serving, same seeded trace + injected error spike
+    engine_qos = qos.QosEngine(
+        policy, {"default": _TARGET, "batch": 10 * _TARGET},
+        sample_fraction=_CANARY_FRACTION, window=8,
+        config=qos.ControllerConfig(min_samples=2, hold_ticks=2,
+                                    fallback_hold=4))
+    q_eng = ServingEngine(model, params, slots=4, max_len=64, prompt_len=8,
+                          qos=engine_qos)
+    _warm(q_eng)
+    q_stats, q_wall = _serve_trace(q_eng, _trace(cfg),
+                                   spike_at=_SPIKE_TICK)
+
+    summary = engine_qos.summary()
+    # per CLASS: the fault drill fires in the batch-only phase, so the
+    # back-off/recovery events live on the "batch" controller -- an
+    # artifact holding only "default" would never show them.
+    traj = {cls: ctl.trajectory_json()
+            for cls, ctl in engine_qos.controllers.items()}
+    p_tps = p_stats.tokens_out / max(p_wall, 1e-9)
+    q_tps = q_stats.tokens_out / max(q_wall, 1e-9)
+
+    report("qos_precise_throughput", f"{1e6 / max(p_tps, 1e-9):.0f}",
+           f"tokens_per_s={p_tps:.1f}")
+    report("qos_approx_throughput", f"{1e6 / max(q_tps, 1e-9):.0f}",
+           f"tokens_per_s={q_tps:.1f},skip_frac="
+           f"{q_stats.taf_skip_fraction:.3f}")
+    report("qos_measured_error", "0",
+           f"genuine_mean={summary['genuine_mean_error']:.4f},"
+           f"canaries={summary['canary_samples']},"
+           f"injected_faults={summary['injected_faults']}")
+    for cls, tgt in (("default", _TARGET), ("batch", 10 * _TARGET)):
+        c = summary["classes"][cls]
+        report(f"qos_class_{cls}", "0",
+               f"target={tgt},exposed_error={c['exposed_mean_error']:.4f},"
+               f"exposed_canaries={c['exposed_canaries']},"
+               f"rung={c['index']}")
+    report("qos_fallback", "0",
+           f"rate={summary['fallback_rate']:.3f},knob_moves="
+           f"{q_stats.knob_moves}")
+    lat = q_stats.latency_summary()
+    report("qos_latency", "0",
+           f"ttft_p50={lat['ttft_p50_s']:.3f}s,ttft_p99="
+           f"{lat['ttft_p99_s']:.3f}s,p50={lat['latency_p50_s']:.3f}s,"
+           f"p99={lat['latency_p99_s']:.3f}s")
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        path = os.path.join(artifacts_dir, "BENCH_qos.json")
+        with open(path, "w") as f:
+            json.dump({
+                "target_max_error": _TARGET,
+                "metric": policy.metric,
+                "canary_fraction": _CANARY_FRACTION,
+                "policy_ladder": policy.to_json()["entries"],
+                "precise": {"tokens_per_s": p_tps,
+                            "latency": p_stats.latency_summary()},
+                "approx": {"tokens_per_s": q_tps,
+                           "taf_skip_fraction": q_stats.taf_skip_fraction,
+                           "knob_moves": q_stats.knob_moves,
+                           "canary_ticks": q_stats.canary_ticks,
+                           "latency": q_stats.latency_summary()},
+                "measured_error": summary["genuine_mean_error"],
+                "measured_error_with_faults": summary["mean_error"],
+                "injected_faults": summary["injected_faults"],
+                "error_estimate": summary["estimate"],
+                "fallback_rate": summary["fallback_rate"],
+                "classes": {
+                    cls: {k: c[k] for k in
+                          ("target", "exposed_mean_error",
+                           "exposed_canaries", "index", "fallback_rate")}
+                    for cls, c in summary["classes"].items()},
+                "knob_actuations": [
+                    {"tick": t, "threshold": v} for t, v in q_eng.knob_log],
+                "knob_trajectory": traj,
+            }, f, indent=1)
+        report("qos_json", "0", path)

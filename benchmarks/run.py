@@ -9,10 +9,13 @@ Prints ``name,us_per_call,derived`` CSV lines. Usage:
 evaluation width (batched runner chunk size / thread-pool workers).
 ``--db`` points those modules at a persistent results database, making
 re-runs resumable (cached specs are not re-executed).
-``--substrate`` selects the execution substrate (host | pallas) for modules
-that dispatch through `repro.core.substrate` (currently the `ffn` kernel
-sweep). ``--artifacts`` names a directory for machine-readable outputs
-(kernel_micro writes its structural numbers there as JSON).
+``--substrate`` selects the execution substrate (host | pallas); a module
+must be able to measure the named path -- see ``substrate_support()`` for
+the per-module table (`ffn` dispatches through `repro.core.substrate`,
+`kernel` is pallas-native, everything else host-only) -- so the flag can
+never silently measure the wrong path. ``--artifacts`` names a directory for machine-readable
+outputs (kernel_micro writes its structural numbers there as JSON;
+qos_serving writes ``BENCH_qos.json``).
 """
 from __future__ import annotations
 
@@ -26,7 +29,7 @@ sys.path.insert(0, "examples")
 from . import (approx_ffn_sweep, fig3_table_memory, fig6_best_speedup,
                fig7_cg_sweep, fig8c_items_per_thread, fig10c_rsd_behavior,
                fig11c_hierarchy, fig12c_kmeans_convergence, kernel_micro,
-               pareto_refine, roofline_table)
+               pareto_refine, qos_serving, roofline_table)
 
 MODULES = {
     "fig3": fig3_table_memory,
@@ -39,8 +42,27 @@ MODULES = {
     "kernel": kernel_micro,
     "ffn": approx_ffn_sweep,
     "pareto": pareto_refine,
+    "qos": qos_serving,
     "roofline": roofline_table,
 }
+
+
+def substrate_support() -> dict:
+    """Explicit --substrate support table: the substrates each module's
+    measurements can come from. A module declaring a `substrate` parameter
+    on its `main` dispatches through `repro.core.substrate` (host or
+    pallas); kernel_micro is pallas-NATIVE (it times the Pallas kernels
+    directly and cannot emulate the host path); everything else always
+    runs the host technique emulation. The CLI fails fast whenever
+    --substrate names a path a selected module cannot measure -- in
+    EITHER direction, so the flag can never silently measure the wrong
+    thing."""
+    table = {key: {"host", "pallas"}
+             if "substrate" in inspect.signature(mod.main).parameters
+             else {"host"}
+             for key, mod in MODULES.items()}
+    table["kernel"] = {"pallas"}
+    return table
 
 
 def main() -> None:
@@ -62,6 +84,23 @@ def main() -> None:
         if key.strip() not in MODULES:
             ap.error(f"unknown module {key.strip()!r} "
                      f"(choose from: {','.join(MODULES)})")
+    if args.substrate:
+        # Fail fast (before any module burns sweep time) when the named
+        # substrate is not what a selected module measures: a host-only
+        # module would silently measure the host emulation under
+        # --substrate pallas, and the pallas-native kernel module would
+        # silently measure the kernels under --substrate host.
+        support = substrate_support()
+        deaf = sorted(k.strip() for k in keys
+                      if args.substrate not in support[k.strip()])
+        if deaf:
+            ap.error(
+                f"--substrate {args.substrate} cannot be honored by "
+                f"{','.join(deaf)}: the flag would silently measure a "
+                "different path. Per-module support: "
+                + "; ".join(f"{k}={'|'.join(sorted(v))}"
+                            for k, v in sorted(support.items())
+                            if k in {x.strip() for x in keys}))
 
     print("name,us_per_call,derived")
 

@@ -1,72 +1,113 @@
-"""The paper's technique as a serving feature: decode-time TAF.
+"""QoS quickstart: quality-guarded approximate serving (docs/qos.md).
 
 Run:  PYTHONPATH=src:examples python examples/approx_serving.py
 
-Generates from a deepseek-7b-family (reduced) model twice -- exact, and
-with per-layer TAF output memoization across decode steps -- and reports
-the fraction of layer-steps skipped plus the divergence between the two
-generations (the serving analogue of the paper's quality loss).
+The closed loop in four steps:
+
+  1. OFFLINE -- calibrate the decode workload through the ordinary sweep
+     harness (`qos.make_decode_app` wraps seeded greedy generation as an
+     ApproxApp; the DB is resumable like any other);
+  2. POLICY  -- `QosPolicy.from_db` turns the DB's Pareto front into a
+     ladder from precise to aggressive, and `choose` picks the offline
+     best rung per quality target;
+  3. SERVE   -- a `ServingEngine` with a `QosEngine` hook runs a seeded
+     two-class request trace. "interactive" traffic carries a 1% token-
+     mismatch target: no ladder rung meets that offline, so the plane
+     (correctly) refuses to approximate while such a lane is live.
+     "batch" traffic tolerates 80%: once only batch lanes remain, the
+     engine opens the knob to batch's rung and the canaries bound the
+     damage online. The TAF threshold is a traced cache entry -- every
+     knob move reuses the one compiled decode step;
+  4. REPORT  -- the knob trajectory, measured error vs each target, and
+     latency/throughput stats.
+
+(The tight class maps to `targets["default"]` -- the class every
+unlabelled request gets.)
 """
 import sys
 
 sys.path.insert(0, "src")
 
-import dataclasses
 import numpy as np
 import jax
-import jax.numpy as jnp
 
-from repro.configs import get_smoke_config
-from repro.core.types import ApproxSpec, Level, TAFParams, Technique
-from repro.launch import steps as steps_mod
+from repro import qos
+from repro.core.harness import sweep
 from repro.models import build
+from repro.serving import Request, ServingEngine
 
-
-def generate(cfg, params, prompts, gen, model):
-    prefill = jax.jit(steps_mod.make_prefill_step(model,
-                                                  prompts.shape[1] + gen))
-    serve = jax.jit(steps_mod.make_serve_step(model))
-    logits, cache = prefill(params, {"tokens": prompts})
-    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    out = [tokens]
-    skipped = total = 0
-    for t in range(gen - 1):
-        tokens, logits, cache = serve(params, cache, tokens,
-                                      jnp.int32(prompts.shape[1] + t))
-        if "taf" in cache:
-            rem = np.asarray(cache["taf"]["remaining"])
-            skipped += int((rem > 0).sum())
-            total += rem.size
-        out.append(tokens)
-    return np.stack([np.asarray(t) for t in out], 1), skipped, total
+TARGETS = {"default": 0.01,   # interactive: <= 1% token mismatch
+           "batch": 0.80}     # throughput tier: best effort
+DB_PATH = "/tmp/qos_decode_db.json"
 
 
 def main():
-    base = dataclasses.replace(get_smoke_config("deepseek-7b"),
-                               remat=False, compute_dtype="float32")
-    taf_cfg = dataclasses.replace(
-        base, approx_decode=ApproxSpec(
-            Technique.TAF, Level.BLOCK,
-            taf=TAFParams(history_size=3, prediction_size=4,
-                          rsd_threshold=0.2)))
+    # 1. offline calibration sweep (re-runs are served from the DB cache)
+    cfg = qos.default_decode_cfg()
+    app = qos.make_decode_app(cfg, gen=12, metric="mcr")
+    grid = qos.threshold_grid(cfg, (0.02, 0.04, 0.06, 0.1, 0.3))
+    sweep(app, grid, repeats=1, db_path=DB_PATH)
 
-    model = build(base)
+    # 2. the policy ladder + the offline choice per target. The DB is
+    #    persistent and shared, so scope to THIS app's workload
+    #    fingerprint -- stale rows from runs with different sizes or a
+    #    different metric must not leak into the ladder.
+    policy = qos.QosPolicy.from_db(DB_PATH, app="taf_decode",
+                                   workload=app.workload, metric="mcr",
+                                   use_modeled=True)
+    choices = {cls: policy.choose(t) for cls, t in TARGETS.items()}
+    print(f"ladder ({len(policy)} rungs):")
+    for i, e in enumerate(policy.entries):
+        owners = ",".join(c for c, ch in choices.items() if ch.index == i)
+        mark = f" <- offline choice for [{owners}]" if owners else ""
+        print(f"  [{i}] thresh={e.spec.get('thresh', 'precise')}: "
+              f"err={e.error:.3f} modeled={e.modeled_speedup:.2f}x{mark}")
+
+    # 3. serve: 6 interactive requests, then 8 batch requests. While any
+    #    interactive lane is live the engine actuates the strictest rung
+    #    (precise); the batch-only tail runs under batch's rung.
+    model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    engine_qos = qos.QosEngine(
+        policy, TARGETS, sample_fraction=0.5, window=8,
+        config=qos.ControllerConfig(min_samples=2, hold_ticks=2))
+    eng = ServingEngine(model, params, slots=4, max_len=64, prompt_len=8,
+                        qos=engine_qos)
     rng = np.random.RandomState(0)
-    prompts = jnp.asarray(rng.randint(0, base.vocab_size, (4, 16)),
-                          jnp.int32)
+    for i in range(14):
+        eng.submit(Request(
+            uid=i, prompt=rng.randint(0, cfg.vocab_size, 8).astype(np.int32),
+            max_new_tokens=10, qos_class="default" if i < 6 else "batch"))
+    stats = eng.run_until_drained()
 
-    exact, _, _ = generate(base, params, prompts, 24, model)
-    model_taf = build(taf_cfg)
-    approx, skipped, total = generate(taf_cfg, params, prompts, 24,
-                                      model_taf)
-
-    agree = float((exact == approx).mean())
-    print(f"TAF decode: skipped {skipped}/{total} layer-steps "
-          f"({100 * skipped / max(total, 1):.1f}%)")
-    print(f"token agreement exact-vs-TAF: {agree:.0%}")
-    print("exact[0]: ", exact[0, :12])
-    print("approx[0]:", approx[0, :12])
+    # 4. report
+    print("\nactuated knob trajectory (tick: threshold; 0.0 = precise):")
+    print("  " + " -> ".join(f"t{t}:{v:g}" for t, v in eng.knob_log))
+    print("controller events (hold/warmup elided):")
+    for cls in ("default", "batch"):
+        for p in engine_qos.controllers[cls].trajectory:
+            if p.event not in ("hold", "warmup", "cooldown"):
+                print(f"  [{cls}] tick {p.step:3d}: rung {p.index} "
+                      f"{p.event:9s} est={p.estimate:.4f}")
+    s = engine_qos.summary()
+    lat = stats.latency_summary()
+    print(f"\nserved {stats.finished} requests, {stats.tokens_out} tokens "
+          f"in {stats.ticks} ticks "
+          f"({100 * stats.taf_skip_fraction:.1f}% layer-steps skipped, "
+          f"{stats.knob_moves} knob moves, zero recompiles)")
+    print(f"global canary error {s['genuine_mean_error']:.4f} over "
+          f"{s['canary_samples']} canaries; per class (what each class's "
+          "lanes were actually exposed to):")
+    for cls in ("default", "batch"):
+        c = s["classes"][cls]
+        ok = "OK" if c["exposed_mean_error"] < TARGETS[cls] else "VIOLATED"
+        print(f"  [{cls}] target={TARGETS[cls]} exposed_error="
+              f"{c['exposed_mean_error']:.4f} ({ok}) over "
+              f"{c['exposed_canaries']} canaries, rung {c['index']}, "
+              f"fallback_rate={c['fallback_rate']:.2f}")
+    print(f"ttft p50/p99: {lat['ttft_p50_s']:.3f}s/{lat['ttft_p99_s']:.3f}s, "
+          f"latency p50/p99: {lat['latency_p50_s']:.3f}s/"
+          f"{lat['latency_p99_s']:.3f}s")
 
 
 if __name__ == "__main__":

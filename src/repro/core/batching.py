@@ -149,6 +149,42 @@ def group_specs(specs: Sequence[ApproxSpec], min_group: int = 2
     return groups, sorted(serial)
 
 
+def group_lanes(specs: Sequence[Optional[ApproxSpec]]
+                ) -> Tuple[Dict[Tuple, Tuple[List[int], List[float]]],
+                           List[int]]:
+    """Partition PER-LANE specs for one batched serving tick.
+
+    Where `group_specs` partitions a sweep grid (and demotes tiny groups to
+    the serial path -- a sweep can reorder freely), lanes are positional: a
+    continuous-batching tick serves lane i's request at index i, so every
+    lane must land somewhere and singleton groups are kept. Returns
+
+      groups:  static-structure key -> (lane indices, their traced knobs)
+               -- each group can run as ONE vmapped call per tick;
+      precise: lanes whose spec is None / technique NONE (the exact path).
+
+    A lane spec with no traced knob (skip-driven perforation) cannot be
+    served under a shared compiled step and raises -- serving ladders are
+    validated up front (`repro.qos.policy.validate_ladder_knobs`), so this
+    is a programming error, not a runtime condition.
+    """
+    groups: Dict[Tuple, Tuple[List[int], List[float]]] = {}
+    precise: List[int] = []
+    for i, spec in enumerate(specs):
+        if spec is None or spec.technique == Technique.NONE:
+            precise.append(i)
+            continue
+        key = static_key(spec)
+        if key is None:
+            raise ValueError(
+                f"lane {i} spec {spec} has no traced quality knob and "
+                "cannot share a compiled serving step")
+        idxs, knobs = groups.setdefault(key, ([], []))
+        idxs.append(i)
+        knobs.append(traced_param(spec))
+    return groups, precise
+
+
 def _default_result(qoi: np.ndarray, frac: float, extra: Dict,
                     wall: float) -> AppResult:
     return AppResult(qoi=qoi, wall_time_s=wall, approx_fraction=frac,

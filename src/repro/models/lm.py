@@ -236,6 +236,13 @@ def _build_transformer(cfg: ModelConfig) -> Model:
         t = cfg.approx_decode.taf
         hd = cfg.resolved_head_dim
         return {
+            # The RSD threshold rides in the cache pytree (one scalar per
+            # layer) rather than closing over the config float: it is a
+            # TRACED input to the jitted decode step, so a controller (the
+            # QoS plane, repro.qos) can move the knob between ticks without
+            # recompiling -- the same static-vs-traced split the Pallas
+            # kernels use for their quality knobs.
+            "threshold": jnp.full((n_layers,), t.rsd_threshold, jnp.float32),
             "window": jnp.zeros((n_layers, t.history_size), jnp.float32),
             "filled": jnp.zeros((n_layers,), jnp.int32),
             "remaining": jnp.zeros((n_layers,), jnp.int32),
@@ -275,7 +282,7 @@ def _build_transformer(cfg: ModelConfig) -> Model:
             mu = jnp.mean(win)
             sd = jnp.std(win)
             stable = (sd / jnp.maximum(jnp.abs(mu), 1e-12) <
-                      t.rsd_threshold) & (filled >= t.history_size)
+                      taf_c["threshold"]) & (filled >= t.history_size)
             k_t = jax.lax.dynamic_slice(
                 new_c["k"], (0, 0, pos, 0),
                 (new_c["k"].shape[0], new_c["k"].shape[1], 1,
@@ -285,6 +292,7 @@ def _build_transformer(cfg: ModelConfig) -> Model:
                 (new_c["v"].shape[0], new_c["v"].shape[1], 1,
                  new_c["v"].shape[3]))
             new_taf = {
+                "threshold": taf_c["threshold"],
                 "window": win, "filled": filled,
                 "remaining": jnp.where(stable, t.prediction_size, 0)
                 .astype(jnp.int32),

@@ -1,0 +1,165 @@
+"""Offline calibration of the decode workload, as a harness ApproxApp.
+
+The QoS policy ladder needs an offline Pareto DB for the workload the
+serving path actually runs: decode-time TAF at various RSD thresholds.
+`make_decode_app` wraps a short, seeded greedy generation as an
+`ApproxApp`, so the calibration IS a `harness.sweep` -- resumable, keyed
+by workload fingerprint, and consumable by `QosPolicy.from_db` exactly
+like any other sweep database.
+
+Because the model's decode threshold is a traced cache entry (see
+models/lm.py `_taf_init_cache`), every threshold in the grid runs through
+the SAME compiled prefill/decode pair -- a whole calibration sweep costs
+one compile.
+
+QoI, per `metric`:
+
+  "mape" -- the stacked per-step logits (the paper's relative output
+            error). Beware: logits cross zero, so relative error is
+            heavy-tailed -- fine for ranking a ladder, rough as an online
+            bound;
+  "mcr"  -- the decoded token ids (paper Eq. 2): the trajectory token-
+            mismatch rate, bounded [0, 1] and the statistic a serving
+            deployment actually contracts on. The online canary compares
+            the same QoI (`QosEngine.observe_decode` argmaxes for mcr).
+
+`approx_fraction`: skipped layer-steps / total layer-steps;
+`flop_fraction = 1 - approx_fraction` (decode cost is layer compute to
+first order), so `modeled_speedup` is the structural bound the Pareto
+front ranks when wall times are noisy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.harness import AppResult, ApproxApp
+from repro.core.types import ApproxSpec, Level, TAFParams, Technique
+from repro.launch import steps as steps_mod
+
+
+def default_decode_cfg(arch: str = "qwen3-1.7b", *, history_size: int = 2,
+                       prediction_size: int = 4,
+                       rsd_threshold: float = 0.5):
+    """A smoke config with decode-time TAF enabled (float32 so canary
+    parity and calibration errors are deterministic)."""
+    from repro.configs import get_smoke_config
+    return dataclasses.replace(
+        get_smoke_config(arch), remat=False, compute_dtype="float32",
+        approx_decode=ApproxSpec(
+            Technique.TAF, Level.BLOCK,
+            taf=TAFParams(history_size=history_size,
+                          prediction_size=prediction_size,
+                          rsd_threshold=rsd_threshold)))
+
+
+def threshold_grid(cfg, thresholds: Sequence[float]) -> List[ApproxSpec]:
+    """TAF specs sharing the config's structural params (history/prediction
+    size shape the decode cache and MUST match) across `thresholds`."""
+    t = cfg.approx_decode.taf
+    return [ApproxSpec(Technique.TAF, Level.BLOCK,
+                       taf=TAFParams(t.history_size, t.prediction_size,
+                                     float(th)))
+            for th in thresholds]
+
+
+def set_decode_threshold(cache, value: float):
+    """Return `cache` with the decode-TAF threshold knob set to `value`
+    (0.0 = precise: RSD < 0 never holds). A hard precise fallback also
+    cancels in-flight predictions, otherwise up to prediction_size more
+    approximated layer-steps would run after the knob move."""
+    taf = dict(cache["taf"])
+    taf["threshold"] = jnp.full_like(taf["threshold"], value)
+    if value == 0.0:
+        taf["remaining"] = jnp.zeros_like(taf["remaining"])
+    return dict(cache, taf=taf)
+
+
+def make_decode_app(cfg=None, *, batch: int = 2, prompt_len: int = 8,
+                    gen: int = 16, seed: int = 0,
+                    metric: str = "mape") -> ApproxApp:
+    """The decode workload as an ApproxApp: run(spec) greedily generates
+    `gen` tokens under spec's TAF threshold and returns the stacked logits.
+
+    Specs must be NONE (precise) or TAF with the config's structural
+    params; anything else raises (this app calibrates the decode knob, not
+    the full technique space).
+    """
+    from repro.models import build
+    if metric not in ("mape", "mcr"):
+        raise ValueError(f"metric must be 'mape' or 'mcr', got {metric!r}")
+    cfg = cfg if cfg is not None else default_decode_cfg()
+    taf_cfg = cfg.approx_decode.taf
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    rng = np.random.RandomState(seed)
+    prompts = jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
+    prefill = jax.jit(steps_mod.make_prefill_step(model, prompt_len + gen))
+    serve = jax.jit(steps_mod.make_serve_step(model))
+
+    def _threshold(spec: ApproxSpec) -> float:
+        if spec.technique == Technique.NONE:
+            return 0.0
+        if spec.technique != Technique.TAF:
+            raise ValueError(
+                f"decode calibration sweeps TAF thresholds; got {spec}")
+        t = spec.taf
+        if (t.history_size, t.prediction_size) != (taf_cfg.history_size,
+                                                   taf_cfg.prediction_size):
+            raise ValueError(
+                "history/prediction size are structural (they shape the "
+                f"decode cache): spec has ({t.history_size}, "
+                f"{t.prediction_size}), config has "
+                f"({taf_cfg.history_size}, {taf_cfg.prediction_size})")
+        return float(t.rsd_threshold)
+
+    warmed = []
+
+    def run(spec: ApproxSpec) -> AppResult:
+        th = _threshold(spec)
+        logits, cache = prefill(params, {"tokens": prompts})
+        tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        if not warmed:
+            # compile the shared serve step OUTSIDE the timed loop (the
+            # exact baseline runs first and would otherwise absorb it)
+            jax.block_until_ready(
+                serve(params, cache, tokens, jnp.int32(prompt_len))[0])
+            warmed.append(True)
+        cache = set_decode_threshold(cache, th)
+        jax.block_until_ready(tokens)
+        skipped = total = 0
+        outs = []
+        t0 = time.perf_counter()
+        for t in range(gen):
+            tokens, logits, cache = serve(params, cache, tokens,
+                                          jnp.int32(prompt_len + t))
+            outs.append(logits)
+            rem = np.asarray(cache["taf"]["remaining"])
+            skipped += int((rem > 0).sum())
+            total += rem.size
+        # stamp BEFORE QoI host assembly: the per-step np.asarray above
+        # already syncs each device step, and np.stack/argmax add a
+        # constant host term that would compress every speedup toward 1
+        # (fast rungs measured <= 1x get pruned from the policy ladder).
+        wall = time.perf_counter() - t0
+        qoi = np.stack([np.asarray(o) for o in outs], axis=0)
+        if metric == "mcr":
+            qoi = np.argmax(qoi, axis=-1)
+        frac = skipped / max(total, 1)
+        return AppResult(qoi=qoi, wall_time_s=wall, approx_fraction=frac,
+                         flop_fraction=max(1.0 - frac, 1e-3),
+                         extra={"skipped_layer_steps": skipped,
+                                "layer_steps": total})
+
+    return ApproxApp(
+        name="taf_decode", run=run, error_metric=metric,
+        workload=dict(arch=getattr(cfg, "name", ""), metric=metric,
+                      batch=batch, prompt_len=prompt_len, gen=gen, seed=seed,
+                      hSize=taf_cfg.history_size,
+                      pSize=taf_cfg.prediction_size))

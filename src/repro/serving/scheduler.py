@@ -10,18 +10,30 @@ no head-of-line blocking on long generations.
 Composes with the paper's technique: a TAF `approx_decode` config skips
 stable layers inside the shared decode step, and the engine reports the
 skipped-layer fraction alongside throughput.
+
+QoS hook (docs/qos.md): pass `qos=QosEngine(...)` and the decode loop runs
+under a controller-chosen spec. Each tick the engine groups live lanes by
+their request class's current knob (`batching.group_lanes` via
+`QosEngine.plan_tick`), actuates the strictest live rung by writing the
+TAF threshold into the decode cache -- a TRACED value, so knob moves never
+recompile -- and, on canary ticks, re-executes the step through the precise
+model from the same pre-tick state and feeds the compared logits to the
+quality monitor. A hard fallback zeroes both the threshold and the
+in-flight prediction counters, so "precise" takes effect on the very next
+token.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Callable, Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.types import ApproxSpec, Technique
 from repro.launch import steps as steps_mod
 from repro.models.lm import Model
 
@@ -32,11 +44,18 @@ class Request:
     prompt: np.ndarray              # (prompt_len,) int32
     max_new_tokens: int = 32
     eos_id: Optional[int] = None
+    qos_class: str = "default"      # maps to a QosEngine target class
     # filled by the engine:
     output: List[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     first_token_at: Optional[float] = None
     finished_at: Optional[float] = None
+
+
+def _percentile(values: List[float], q: float) -> Optional[float]:
+    if not values:
+        return None
+    return float(np.percentile(np.asarray(values, np.float64), q))
 
 
 @dataclasses.dataclass
@@ -46,17 +65,48 @@ class EngineStats:
     finished: int = 0
     taf_skipped: int = 0
     taf_total: int = 0
+    canary_ticks: int = 0           # ticks re-executed through the oracle
+    knob_moves: int = 0             # actuator writes (QoS rung changes)
+    # per-request latency samples (seconds), appended as requests progress:
+    ttft_s: List[float] = dataclasses.field(default_factory=list)
+    latency_s: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def taf_skip_fraction(self) -> float:
         return self.taf_skipped / max(self.taf_total, 1)
+
+    @property
+    def ttft_p50(self) -> Optional[float]:
+        return _percentile(self.ttft_s, 50)
+
+    @property
+    def ttft_p99(self) -> Optional[float]:
+        return _percentile(self.ttft_s, 99)
+
+    @property
+    def latency_p50(self) -> Optional[float]:
+        return _percentile(self.latency_s, 50)
+
+    @property
+    def latency_p99(self) -> Optional[float]:
+        return _percentile(self.latency_s, 99)
+
+    def latency_summary(self) -> Dict[str, Optional[float]]:
+        """Time-to-first-token and end-to-end request latency, p50/p99 --
+        what the QoS benchmark reports alongside throughput and error."""
+        return {
+            "ttft_p50_s": self.ttft_p50, "ttft_p99_s": self.ttft_p99,
+            "latency_p50_s": self.latency_p50,
+            "latency_p99_s": self.latency_p99,
+            "requests": len(self.latency_s),
+        }
 
 
 class ServingEngine:
     """Slot-based continuous batching over a fixed decode batch size."""
 
     def __init__(self, model: Model, params, *, slots: int = 4,
-                 max_len: int = 256, prompt_len: int = 32):
+                 max_len: int = 256, prompt_len: int = 32, qos=None):
         self.model = model
         self.params = params
         self.n_slots = slots
@@ -73,6 +123,32 @@ class ServingEngine:
         self._serve = jax.jit(steps_mod.make_serve_step(model))
         self.cache = None
         self.tokens = jnp.zeros((slots,), jnp.int32)
+        self.qos = qos
+        self._knob: Optional[float] = None          # last actuated threshold
+        # (tick, threshold) per actuation -- the engine-level knob
+        # trajectory (controller trajectories live on the QosEngine)
+        self.knob_log: List[tuple] = []
+        self._serve_exact = None
+        if qos is not None:
+            if (model.cfg.approx_decode.technique != Technique.TAF
+                    or model.cfg.use_mla or model.cfg.moe is not None):
+                raise ValueError(
+                    "QoS-controlled serving needs decode-time TAF: build "
+                    "the model with cfg.approx_decode = a TAF spec (the "
+                    "threshold is the online actuator)")
+            # The actuator writes ONLY the threshold scalar, so every
+            # rung must describe THIS model's decode step (the ladder
+            # semantics live qos-side; see the helper's docstring).
+            from repro.qos import validate_ladder_taf
+            validate_ladder_taf(qos.policy, model.cfg.approx_decode.taf)
+            # the canary oracle: the SAME params through a precise decode
+            # step (approx_decode disabled). Its cache layout matches --
+            # the extra 'taf' entry rides through the pytree untouched.
+            from repro.models import build
+            exact_model = build(dataclasses.replace(
+                model.cfg, approx_decode=ApproxSpec()))
+            self._serve_exact = jax.jit(
+                steps_mod.make_serve_step(exact_model))
 
     def submit(self, req: Request):
         req.submitted_at = time.time()
@@ -105,6 +181,30 @@ class ServingEngine:
             logits, self.cache = self._prefill(self.params,
                                                {"tokens": jnp.asarray(prompts)})
             self.tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            self._knob = None   # prefill rebuilt the cache: re-actuate
+
+    def _apply_knob(self, knob: Optional[float]):
+        """Write the controller-chosen TAF threshold into the decode cache.
+
+        The threshold is a traced input of the jitted serve step, so this
+        is a pure data write -- no recompilation. `None` (precise) writes
+        0.0 AND cancels in-flight predictions ("remaining"), making a hard
+        fallback effective on the next token rather than after up to
+        prediction_size more approximated layer-steps.
+        """
+        val = 0.0 if knob is None else float(knob)
+        if self.cache is None or val == self._knob:
+            return
+        from repro.qos import set_decode_threshold
+        self.cache = set_decode_threshold(self.cache, val)
+        self._knob = val
+        # Admission re-prefills rebuild the cache and force a re-apply of
+        # the SAME value (self._knob reset to None); that is maintenance,
+        # not a controller decision -- only genuine value changes are
+        # knob moves in the stats and the trajectory artifact.
+        if not self.knob_log or self.knob_log[-1][1] != val:
+            self.stats.knob_moves += 1
+            self.knob_log.append((self.stats.ticks, val))
 
     def tick(self) -> int:
         """One engine step: admit, decode one token for all active slots,
@@ -113,9 +213,25 @@ class ServingEngine:
         live = [i for i, r in enumerate(self.active) if r is not None]
         if not live:
             return 0
+        lane_classes = []
+        if self.qos is not None:
+            lane_classes = [self.active[i].qos_class for i in live]
+            plan = self.qos.plan_tick(lane_classes)
+            self._apply_knob(plan.knob)
         pos = int(self.pos[live].min())  # single shared timeline position
-        self.tokens, _, self.cache = self._serve(
+        pre_tokens, pre_cache = self.tokens, self.cache
+        self.tokens, logits, self.cache = self._serve(
             self.params, self.cache, self.tokens, jnp.int32(pos))
+        if self.qos is not None and self.qos.should_sample():
+            # canary: the precise oracle from the SAME pre-tick state.
+            # Score ONLY the live lanes -- idle/retired slots hold
+            # zero-padded or stale state nobody consumes, and their
+            # garbage logits would pollute the quality estimate.
+            _, exact_logits, _ = self._serve_exact(
+                self.params, pre_cache, pre_tokens, jnp.int32(pos))
+            self.qos.observe_decode(np.asarray(exact_logits)[live],
+                                    np.asarray(logits)[live], lane_classes)
+            self.stats.canary_ticks += 1
         toks = np.asarray(self.tokens)
         if self.cache is not None and "taf" in self.cache:
             rem = np.asarray(self.cache["taf"]["remaining"])
@@ -126,6 +242,7 @@ class ServingEngine:
             req = self.active[i]
             if req.first_token_at is None:
                 req.first_token_at = now
+                self.stats.ttft_s.append(now - req.submitted_at)
             req.output.append(int(toks[i]))
             self.pos[i] += 1
             self.stats.tokens_out += 1
@@ -133,9 +250,12 @@ class ServingEngine:
                     (req.eos_id is not None and toks[i] == req.eos_id))
             if done:
                 req.finished_at = now
+                self.stats.latency_s.append(now - req.submitted_at)
                 self.active[i] = None
                 self.stats.finished += 1
         self.stats.ticks += 1
+        if self.qos is not None:
+            self.qos.update(lane_classes)
         return len([r for r in self.active if r is not None])
 
     def run_until_drained(self, max_ticks: int = 10_000) -> EngineStats:

@@ -239,6 +239,54 @@ def test_hypervolume():
     assert hypervolume([_rec(2.0, 5.0), _rec(0.1, 0.5)], ref_error=1.0) == 0.0
 
 
+def test_pareto_edge_cases_empty_and_singleton():
+    # empty record set: empty front, zero dominated area
+    assert pareto_front([]) == []
+    assert hypervolume([]) == 0.0
+    # all-non-finite set degenerates to empty too
+    assert pareto_front([_rec(float("inf"), 2.0),
+                         _rec(float("nan"), 3.0)]) == []
+    # single point IS the front, whatever it is
+    only = _rec(0.7, 0.4)
+    assert pareto_front([only]) == [only]
+    assert dominates(only, _rec(0.8, 0.4)) and not dominates(only, only)
+
+
+def test_pareto_duplicate_objective_ties():
+    # duplicate (error, speedup) points: one representative survives and
+    # the dominated-area indicator counts the shared rectangle ONCE
+    a1 = _rec(0.2, 3.0, thresh=0.1)
+    a2 = _rec(0.2, 3.0, thresh=0.9)   # different spec, same objectives
+    front = pareto_front([a1, a2])
+    assert len(front) == 1
+    assert hypervolume([a1, a2], ref_error=1.0) == \
+        hypervolume([a1], ref_error=1.0) == pytest.approx(0.8 * 2.0)
+    # a tie on ONE axis is not a tie: the faster of the pair dominates
+    b_fast, b_slow = _rec(0.2, 3.0), _rec(0.2, 2.0)
+    assert pareto_front([b_slow, b_fast]) == [b_fast]
+    assert dominates(b_fast, b_slow) and not dominates(b_slow, b_fast)
+
+
+def test_best_speedup_under_error_edges():
+    recs = [_rec(0.05, 2.0), _rec(0.2, 4.0)]
+    best = harness_mod.best_speedup_under_error(recs, max_error=0.10)
+    assert best is not None and best.speedup == 2.0
+    # strict bound: error == max_error does not qualify
+    assert harness_mod.best_speedup_under_error(
+        recs, max_error=0.05) is None
+    # no spec under the bound -> None, not an exception
+    assert harness_mod.best_speedup_under_error(recs, max_error=0.01) is None
+    assert harness_mod.best_speedup_under_error([], max_error=0.5) is None
+    # use_modeled ranks by the structural bound
+    slow_but_modeled = Record(app="toy", spec=spec_to_dict(taf_spec(0.7)),
+                              error=0.01, speedup=1.1, modeled_speedup=9.0,
+                              approx_fraction=0.0, wall_time_s=1.0,
+                              exact_time_s=1.0, extra={})
+    got = harness_mod.best_speedup_under_error(
+        [recs[0], slow_but_modeled], max_error=0.10, use_modeled=True)
+    assert got is slow_but_modeled
+
+
 def test_propose_candidates_subdivides_brackets():
     app = make_toy_app()
     recs = sweep(app, [taf_spec(t) for t in (0.1, 0.9)], repeats=1)
