@@ -12,9 +12,16 @@ statistic, modeled speedup = the structural FLOP bound) and the Pareto
 front summary. Also cross-checks one spec per technique against the host
 substrate (the ref.py oracles): `mask_parity` asserts the kernel's
 approx-mask matches the oracle's bit for bit in interpret mode.
+
+With `artifacts_dir`, writes ``BENCH_ffn.json`` (structural sweep numbers:
+record/front counts, hypervolume, best-under-bound rows, parity bits) --
+the committed copy under ``benchmarks/baselines/`` is a regression
+baseline for ``benchmarks.run --check-regression``.
 """
 from __future__ import annotations
 
+import json
+import os
 from typing import Optional
 
 from apps import approx_ffn
@@ -39,15 +46,18 @@ def _grid():
 
 
 def main(report, jobs: int = 1, db_path: Optional[str] = None,
-         substrate: Optional[str] = "pallas") -> None:
+         substrate: Optional[str] = "pallas",
+         artifacts_dir: Optional[str] = None) -> None:
     app = approx_ffn.make_app(substrate=substrate)
     grid = _grid()
     recs = sweep(app, grid, repeats=1, db_path=db_path, jobs=max(jobs, 1))
 
+    best_rows = {}
     for tech in ("taf", "iact", "perfo"):
         rows = [r for r in recs if r.spec.get("technique") == tech]
         best = best_speedup_under_error(rows, max_error=0.10,
                                         use_modeled=True)
+        best_rows[tech] = best
         derived = ("no_config_under_10pct" if best is None else
                    f"modeled={best.modeled_speedup:.2f}x,"
                    f"err={best.error:.4f},approx={best.approx_fraction:.2f}")
@@ -68,7 +78,28 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
                         Technique.PERFORATION)]
     prec = sweep(app, probes, repeats=1, db_path=db_path)
     hrec = sweep(host, probes, repeats=1)
+    parity = {}
     for p, h in zip(prec, hrec):
         ok = p.extra.get("approx_mask") == h.extra.get("approx_mask")
+        parity[p.spec.get("technique")] = bool(ok)
         report(f"approx_ffn_parity_{p.spec.get('technique')}", "0",
                f"mask_parity={ok},err_delta={abs(p.error - h.error):.2e}")
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        path = os.path.join(artifacts_dir, "BENCH_ffn.json")
+        with open(path, "w") as f:
+            json.dump({
+                "substrate": app.workload["substrate"],
+                "n_records": len(recs),
+                "front": fs,
+                "best_under_10pct": {
+                    tech: (None if b is None else {
+                        "modeled_speedup": b.modeled_speedup,
+                        "error": b.error,
+                        "approx_fraction": b.approx_fraction,
+                        "spec": b.spec})
+                    for tech, b in best_rows.items()},
+                "parity": parity,
+            }, f, indent=1)
+        report("ffn_json", "0", path)

@@ -10,9 +10,18 @@ so the report also exercises the hard precise fallback and the recovery.
 
 Reports throughput (tokens/s), measured canary error vs the target, the
 fallback rate, knob trajectory length, and TTFT/latency percentiles. With
-`artifacts_dir`, writes ``BENCH_qos.json`` -- the repo's first serving perf
-artifact (throughput, measured error, fallback rate, knob trajectory),
-uploaded by the fast CI job so the trajectory is diffable across commits.
+`artifacts_dir`, writes ``BENCH_qos.json`` (throughput, measured error,
+fallback rate, knob trajectory). The committed copy under
+``benchmarks/baselines/`` is the regression baseline ``benchmarks.run
+--check-regression`` gates CI against.
+
+With ``devices=N`` (CLI ``--devices N``) both engines run the decode step
+shard_map'd over an (N, 1) data-parallel mesh with one logical shard per
+device and ``_LANES_PER_SHARD`` lanes per shard -- slots scale with the
+mesh, the request trace's open-loop arrival rate scales with slots, and
+the fault drill injects into ONE shard's canary stream (per-shard
+fallback). The artifact then also records devices/mesh_shape/shards and
+the per-shard knob trajectories.
 """
 from __future__ import annotations
 
@@ -25,7 +34,6 @@ import dataclasses
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 
 from repro import qos
 from repro.core.harness import sweep
@@ -39,6 +47,7 @@ _TARGET = 0.10          # max one-step token-mismatch rate
 _CANARY_FRACTION = 0.25
 _N_REQUESTS = 10
 _GEN = 8
+_LANES_PER_SHARD = 4    # sharded runs: slots = lanes * shards
 _SPIKE_TICK = 22        # deterministic fault injection (monitor.inject),
 #                         late in the batch-only phase: the knob is open,
 #                         so the drill exercises a real back-off
@@ -46,44 +55,37 @@ _SPIKE_TICK = 22        # deterministic fault injection (monitor.inject),
 _SPIKE_ERROR = 10.0
 
 
-def _trace(cfg, seed: int = 0):
+def _trace(cfg, seed: int = 0, *, slots: int = 4,
+           n_requests: int = _N_REQUESTS):
     """Seeded open-loop trace: arrival tick, prompt, class per request.
     Interactive ("default", tight bound) requests arrive first; a batch
     tail follows, so the run exercises both the strictest-live-lane
     actuation (precise while interactive lanes are live) and the opened
-    knob once only batch lanes remain."""
+    knob once only batch lanes remain. The arrival rate scales with the
+    engine's slot count (one request per _GEN/slots ticks keeps the
+    steady-state concurrency near the slot count), and reduces to the
+    historical 2-ticks-per-request spacing at the default slots=4."""
     rng = np.random.RandomState(seed)
     reqs = []
-    for i in range(_N_REQUESTS):
-        arrival = int(rng.randint(0, 3)) + 2 * i
+    for i in range(n_requests):
+        arrival = int(rng.randint(0, 3)) + (i * _GEN) // slots
         prompt = rng.randint(0, cfg.vocab_size, 8).astype(np.int32)
-        cls = "default" if i < _N_REQUESTS // 2 else "batch"
+        cls = "default" if i < n_requests // 2 else "batch"
         reqs.append((arrival, Request(uid=i, prompt=prompt,
                                       max_new_tokens=_GEN, qos_class=cls)))
     return reqs
 
 
-def _warm(engine):
-    """Compile the engine's prefill/serve (and, under QoS, the precise
-    oracle) outside the timed trace: the first tick otherwise absorbs
-    seconds of jax.jit compile into tokens_per_s, and the two engines
-    compile DIFFERENT graphs, so the throughput comparison would mostly
-    be a compile-time comparison. Pure function calls on throwaway data;
-    engine state is untouched."""
-    prompts = jnp.zeros((engine.n_slots, engine.prompt_len), jnp.int32)
-    logits, cache = engine._prefill(engine.params, {"tokens": prompts})
-    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    pos = jnp.int32(engine.prompt_len)
-    jax.block_until_ready(
-        engine._serve(engine.params, cache, tokens, pos)[0])
-    if engine._serve_exact is not None:
-        jax.block_until_ready(
-            engine._serve_exact(engine.params, cache, tokens, pos)[0])
-
-
-def _serve_trace(engine, trace, *, spike_at: Optional[int] = None):
+def _serve_trace(engine, trace, *, spike_at: Optional[int] = None,
+                 spike_shard: Optional[int] = None):
     """Open-loop drive: submissions happen at their arrival tick whether or
-    not the engine kept up. Returns (stats, wall_seconds)."""
+    not the engine kept up. Returns (stats, wall_seconds). The caller must
+    have called `engine.warmup()` -- the timed region below measures
+    decode, and the compile of a sharded serve step is seconds.
+
+    `spike_shard` routes the fault drill into one shard's canary stream
+    (`QosEngine.inject(..., shard=)`): only the classes live on that shard
+    react, exercising the per-shard fallback path."""
     pending = sorted(trace, key=lambda ar: ar[0])
     t0 = time.perf_counter()
     tick = 0
@@ -91,7 +93,10 @@ def _serve_trace(engine, trace, *, spike_at: Optional[int] = None):
         while pending and pending[0][0] <= tick:
             engine.submit(pending.pop(0)[1])
         if spike_at is not None and tick == spike_at and engine.qos:
-            engine.qos.monitor.inject(_SPIKE_ERROR)
+            if spike_shard is None:
+                engine.qos.monitor.inject(_SPIKE_ERROR)
+            else:
+                engine.qos.inject(_SPIKE_ERROR, shard=spike_shard)
         engine.tick()
         tick += 1
         if tick > 10_000:
@@ -100,8 +105,26 @@ def _serve_trace(engine, trace, *, spike_at: Optional[int] = None):
 
 
 def main(report, jobs: int = 1, db_path: Optional[str] = None,
-         artifacts_dir: Optional[str] = None) -> None:
+         artifacts_dir: Optional[str] = None,
+         devices: Optional[int] = None,
+         shards: Optional[int] = None) -> None:
     cfg = qos.default_decode_cfg()
+
+    if devices is not None:
+        avail = len(jax.devices())
+        if devices > avail:
+            raise RuntimeError(
+                f"--devices {devices} but only {avail} device(s) visible; "
+                f"set XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{devices} for a fake multi-device host")
+        n_shards = int(shards) if shards is not None else int(devices)
+        slots = _LANES_PER_SHARD * n_shards
+        engine_kw = dict(devices=int(devices), shards=n_shards)
+    else:
+        n_shards = 1
+        slots = 4
+        engine_kw = {}
+    n_requests = max(_N_REQUESTS, (5 * slots) // 2)
 
     # 1. offline: calibrate the decode workload through the normal harness
     #    (resumable when --db is given; one compile for the whole grid)
@@ -117,25 +140,35 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
     model = build(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    # 2. precise baseline over the same trace (same params, TAF disabled)
+    trace_kw = dict(slots=slots, n_requests=n_requests)
+
+    # 2. precise baseline over the same trace (same params, TAF disabled;
+    #    same mesh/shards, so the throughput comparison is knob vs no-knob,
+    #    not sharded vs unsharded)
     precise_model = build(dataclasses.replace(cfg,
                                               approx_decode=ApproxSpec()))
-    precise_eng = ServingEngine(precise_model, params, slots=4, max_len=64,
-                                prompt_len=8)
-    _warm(precise_eng)
-    p_stats, p_wall = _serve_trace(precise_eng, _trace(cfg))
+    precise_eng = ServingEngine(precise_model, params, slots=slots,
+                                max_len=64, prompt_len=8, **engine_kw)
+    precise_eng.warmup()
+    p_stats, p_wall = _serve_trace(precise_eng, _trace(cfg, **trace_kw))
 
     # 3. QoS-controlled serving, same seeded trace + injected error spike
+    #    (sharded runs drill ONE shard -- the last, which hosts batch-class
+    #    lanes by the spike tick)
     engine_qos = qos.QosEngine(
         policy, {"default": _TARGET, "batch": 10 * _TARGET},
         sample_fraction=_CANARY_FRACTION, window=8,
         config=qos.ControllerConfig(min_samples=2, hold_ticks=2,
                                     fallback_hold=4))
-    q_eng = ServingEngine(model, params, slots=4, max_len=64, prompt_len=8,
-                          qos=engine_qos)
-    _warm(q_eng)
-    q_stats, q_wall = _serve_trace(q_eng, _trace(cfg),
-                                   spike_at=_SPIKE_TICK)
+    q_eng = ServingEngine(model, params, slots=slots, max_len=64,
+                          prompt_len=8, qos=engine_qos, **engine_kw)
+    q_eng.warmup()
+    q_stats, q_wall = _serve_trace(
+        q_eng, _trace(cfg, **trace_kw), spike_at=_SPIKE_TICK,
+        spike_shard=(n_shards - 1 if n_shards > 1 else None))
+    report("qos_mesh", "0",
+           f"devices={devices or 1},mesh_shape={q_eng.mesh_shape},"
+           f"shards={n_shards},slots={slots},requests={n_requests}")
 
     summary = engine_qos.summary()
     # per CLASS: the fault drill fires in the batch-only phase, so the
@@ -173,11 +206,31 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
     if artifacts_dir:
         os.makedirs(artifacts_dir, exist_ok=True)
         path = os.path.join(artifacts_dir, "BENCH_qos.json")
+        # engine-level knob actuations; sharded entries hold one value per
+        # shard, and the per-shard trajectories below slice them out
+        actuations = [
+            {"tick": t, "threshold": (list(v) if isinstance(v, tuple)
+                                      else v)}
+            for t, v in q_eng.knob_log]
+        per_shard_traj = None
+        if n_shards > 1:
+            per_shard_traj = {
+                str(s): [{"tick": t,
+                          "threshold": (v[s] if isinstance(v, tuple)
+                                        else v)}
+                         for t, v in q_eng.knob_log]
+                for s in range(n_shards)}
         with open(path, "w") as f:
             json.dump({
                 "target_max_error": _TARGET,
                 "metric": policy.metric,
                 "canary_fraction": _CANARY_FRACTION,
+                "devices": int(devices) if devices else 1,
+                "mesh_shape": (list(q_eng.mesh_shape)
+                               if q_eng.mesh_shape else None),
+                "shards": n_shards,
+                "slots": slots,
+                "requests": n_requests,
                 "policy_ladder": policy.to_json()["entries"],
                 "precise": {"tokens_per_s": p_tps,
                             "latency": p_stats.latency_summary()},
@@ -196,8 +249,9 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
                           ("target", "exposed_mean_error",
                            "exposed_canaries", "index", "fallback_rate")}
                     for cls, c in summary["classes"].items()},
-                "knob_actuations": [
-                    {"tick": t, "threshold": v} for t, v in q_eng.knob_log],
+                "knob_actuations": actuations,
                 "knob_trajectory": traj,
+                "knob_trajectory_per_shard": per_shard_traj,
+                "shard_exposure": summary.get("shard_exposure"),
             }, f, indent=1)
         report("qos_json", "0", path)

@@ -15,12 +15,29 @@ the per-module table (`ffn` dispatches through `repro.core.substrate`,
 `kernel` is pallas-native, everything else host-only) -- so the flag can
 never silently measure the wrong path. ``--artifacts`` names a directory for machine-readable
 outputs (kernel_micro writes its structural numbers there as JSON;
-qos_serving writes ``BENCH_qos.json``).
+qos_serving writes ``BENCH_qos.json``; approx_ffn_sweep writes
+``BENCH_ffn.json``).
+``--devices`` runs device-aware modules (currently `qos`) with the decode
+data plane sharded over that many devices (pair with
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on a 1-GPU/CPU
+host).
+``--check-regression <baseline-dir-or-file>`` compares the artifacts
+produced THIS run against committed baselines (benchmarks/baselines/) and
+exits non-zero beyond the noise margin -- the CI perf gate. Structural
+numbers (counts, fractions, hypervolumes) are held to a tight relative
+tolerance; wall-clock throughputs only have to stay above
+``(1 - noise) * baseline`` (default --noise 0.8, i.e. a 5x slowdown
+fails: the gate exists to catch order-of-magnitude regressions like a
+compile landing inside a timed region, not scheduler jitter across CI
+hosts).
 """
 from __future__ import annotations
 
 import argparse
+import glob
 import inspect
+import json
+import os
 import sys
 import time
 
@@ -65,6 +82,100 @@ def substrate_support() -> dict:
     return table
 
 
+# --------------------------------------------------------------------------
+# regression gate: fresh artifacts vs committed baselines
+# --------------------------------------------------------------------------
+
+# Per-artifact check rules, by dotted path into the JSON:
+#   exact    -- configuration identity: a mismatch means the benchmark is
+#               no longer measuring the same thing as the baseline;
+#   close    -- structural/quality numbers, deterministic up to float
+#               rounding across hosts: |new - base| <= atol + rtol * |base|;
+#   atleast  -- wall-clock throughputs: new >= (1 - noise) * base.
+_BASELINE_CHECKS = {
+    "BENCH_qos.json": {
+        "exact": ("metric", "devices", "shards", "slots", "requests"),
+        "close": ("measured_error", "fallback_rate",
+                  "approx.taf_skip_fraction"),
+        "atleast": ("precise.tokens_per_s", "approx.tokens_per_s"),
+    },
+    "BENCH_ffn.json": {
+        "exact": ("substrate", "n_records", "parity.taf", "parity.iact",
+                  "parity.perfo"),
+        "close": ("front.n_front", "front.hypervolume", "front.best_error",
+                  "front.best_speedup"),
+        "atleast": (),
+    },
+}
+
+
+def _lookup(doc, dotted):
+    cur = doc
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_regression(artifacts_dir: str, baseline: str, *,
+                     noise: float = 0.8, rtol: float = 0.25,
+                     atol: float = 0.05) -> list:
+    """Compare this run's artifacts against committed baselines. Returns a
+    list of human-readable failure strings (empty = gate passed). Every
+    baseline file must have a fresh counterpart: a module silently dropped
+    from the benchmark run is itself a regression."""
+    if os.path.isdir(baseline):
+        base_files = sorted(glob.glob(os.path.join(baseline,
+                                                   "BENCH_*.json")))
+    else:
+        base_files = [baseline]
+    if not base_files:
+        return [f"no BENCH_*.json baselines found under {baseline}"]
+    failures = []
+    for bf in base_files:
+        name = os.path.basename(bf)
+        af = os.path.join(artifacts_dir, name)
+        rules = _BASELINE_CHECKS.get(name)
+        if rules is None:
+            failures.append(f"{name}: no check rules registered in "
+                            f"benchmarks.run._BASELINE_CHECKS")
+            continue
+        if not os.path.exists(af):
+            failures.append(f"{name}: baseline committed but no fresh "
+                            f"artifact in {artifacts_dir} (module not run?)")
+            continue
+        with open(bf) as f:
+            base = json.load(f)
+        with open(af) as f:
+            new = json.load(f)
+        for key in rules["exact"]:
+            b, n = _lookup(base, key), _lookup(new, key)
+            if b != n:
+                failures.append(f"{name}:{key}: expected {b!r}, got {n!r}")
+        for key in rules["close"]:
+            b, n = _lookup(base, key), _lookup(new, key)
+            if not isinstance(n, (int, float)) or not isinstance(
+                    b, (int, float)):
+                failures.append(f"{name}:{key}: non-numeric "
+                                f"(base={b!r}, new={n!r})")
+            elif abs(n - b) > atol + rtol * abs(b):
+                failures.append(
+                    f"{name}:{key}: {n:.6g} vs baseline {b:.6g} "
+                    f"(tolerance atol={atol} rtol={rtol})")
+        for key in rules["atleast"]:
+            b, n = _lookup(base, key), _lookup(new, key)
+            if not isinstance(n, (int, float)) or not isinstance(
+                    b, (int, float)):
+                failures.append(f"{name}:{key}: non-numeric "
+                                f"(base={b!r}, new={n!r})")
+            elif n < (1.0 - noise) * b:
+                failures.append(
+                    f"{name}:{key}: {n:.6g} below {(1 - noise):.0%} of "
+                    f"baseline {b:.6g} (noise margin {noise})")
+    return failures
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
@@ -78,7 +189,18 @@ def main() -> None:
                     help="execution substrate for kernel-aware modules")
     ap.add_argument("--artifacts", default=None,
                     help="directory for machine-readable outputs (JSON)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="shard device-aware modules (qos) over N devices")
+    ap.add_argument("--check-regression", default=None, metavar="BASELINE",
+                    help="after the run, compare --artifacts against this "
+                    "baseline dir/file and exit non-zero on regression")
+    ap.add_argument("--noise", type=float, default=0.8,
+                    help="throughput noise margin for --check-regression "
+                    "(fail below (1-noise)*baseline; default 0.8)")
     args = ap.parse_args()
+    if args.check_regression and not args.artifacts:
+        ap.error("--check-regression needs --artifacts (the gate compares "
+                 "the artifacts THIS run writes)")
     keys = args.only.split(",") if args.only else list(MODULES)
     for key in keys:  # fail fast, before any module burns sweep time
         if key.strip() not in MODULES:
@@ -112,7 +234,8 @@ def main() -> None:
         accepted = inspect.signature(mod.main).parameters
         kw = {k: v for k, v in (("jobs", args.jobs), ("db_path", args.db),
                                 ("substrate", args.substrate),
-                                ("artifacts_dir", args.artifacts))
+                                ("artifacts_dir", args.artifacts),
+                                ("devices", args.devices))
               if k in accepted and v is not None}
         t0 = time.time()
         try:
@@ -120,6 +243,19 @@ def main() -> None:
         except Exception as e:  # keep the harness running
             report(key, "ERROR", str(e)[:200])
         report(f"_{key}_total_s", f"{time.time() - t0:.1f}")
+
+    if args.check_regression:
+        # after the module loop, OUTSIDE the per-module exception guard:
+        # the gate must fail the process, not become an ERROR row
+        fails = check_regression(args.artifacts, args.check_regression,
+                                 noise=args.noise)
+        for f in fails:
+            report("regression", "FAIL", f)
+        if fails:
+            sys.exit(2)
+        report("regression", "OK",
+               f"artifacts match {args.check_regression} "
+               f"(noise={args.noise})")
 
 
 if __name__ == "__main__":

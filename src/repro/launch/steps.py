@@ -100,3 +100,101 @@ def make_serve_step(model: Model) -> Callable:
         return next_tokens, logits, new_cache
 
     return serve_step
+
+
+def make_sharded_serve_step(model: Model, mesh, n_shards: int,
+                            batch_size: int) -> Callable:
+    """The serve step shard_map'd over the mesh's data axes: request lanes
+    are data-parallel, and the decode cache's TAF detector state (see
+    `models.lm.shard_taf_state`) carries a leading LOGICAL-shard dim that is
+    vmapped inside each device, so:
+
+      * n_shards is decoupled from the device count (any multiple of the
+        mesh's data extent): the same engine config runs on 1 device and
+        on the CI 8-device mesh with bit-identical outputs -- per-shard
+        compute has no cross-shard collectives, and vmap of the per-shard
+        step produces the same values regardless of how shards are packed
+        onto devices;
+      * each shard's TAF threshold is an independent traced knob: the QoS
+        plane tightens/loosens individual shards by writing one row of the
+        (n_shards, n_layers) threshold leaf -- never a recompile;
+      * the TAF stability statistic (a batch mean) is computed over each
+        shard's OWN lanes, so one shard's regime change cannot flip
+        another shard's skip decisions.
+
+    Call with a cache whose TAF state has been through `shard_taf_state`.
+    Signature matches `make_serve_step`: (params, cache, tokens (B,), pos)
+    -> (next_tokens, logits, new_cache).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.compat import shard_map
+    from repro.runtime import sharding as shardlib
+
+    serve = make_serve_step(model)
+    da = shardlib.data_axes(mesh)
+    if not da:
+        raise ValueError("mesh has no data axis (expected 'data'/'pod')")
+    daxis = da if len(da) > 1 else da[0]
+    n_data = 1
+    for a in da:
+        n_data *= int(mesh.shape[a])
+    if n_shards % n_data:
+        raise ValueError(f"n_shards ({n_shards}) must be a multiple of the "
+                         f"mesh's data extent ({n_data})")
+    if batch_size % n_shards:
+        raise ValueError(f"batch_size ({batch_size}) must divide evenly "
+                         f"into {n_shards} shards")
+    local_shards = n_shards // n_data
+    lanes = batch_size // n_shards
+    tok_spec = shardlib.batch_spec(mesh)
+
+    def sharded_step(params, cache, tokens, pos):
+        paths_leaves, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        kinds = [shardlib.decode_shard_axis(p, l.shape, batch_size)
+                 for p, l in paths_leaves]
+        cache_specs = shardlib.decode_partition_specs(mesh, cache,
+                                                      batch_size)
+        # vmap axis per leaf: the shard dim's position (None = broadcast)
+        vmap_axes = jax.tree_util.tree_unflatten(
+            treedef, [None if k is None else k[1] for k in kinds])
+
+        def local_step(params, cache, tokens, pos):
+            # split each local leaf's lane dim (local_shards * lanes) into
+            # an explicit shard dim for vmap; detector-state leaves already
+            # lead with it
+            def split(leaf, kind):
+                if kind is None or kind[0] == "state":
+                    return leaf
+                ax, sh = kind[1], leaf.shape
+                return leaf.reshape(sh[:ax] + (local_shards, lanes)
+                                    + sh[ax + 1:])
+
+            def merge(leaf, kind):
+                if kind is None or kind[0] == "state":
+                    return leaf
+                ax, sh = kind[1], leaf.shape
+                return leaf.reshape(sh[:ax] + (local_shards * lanes,)
+                                    + sh[ax + 2:])
+
+            leaves = treedef.flatten_up_to(cache)
+            c = jax.tree_util.tree_unflatten(
+                treedef, [split(l, k) for l, k in zip(leaves, kinds)])
+            step = jax.vmap(serve, in_axes=(None, vmap_axes, 0, None),
+                            out_axes=(0, 0, vmap_axes))
+            ntok, logits, ncache = step(
+                params, c, tokens.reshape(local_shards, lanes), pos)
+            nleaves = treedef.flatten_up_to(ncache)
+            ncache = jax.tree_util.tree_unflatten(
+                treedef, [merge(l, k) for l, k in zip(nleaves, kinds)])
+            return (ntok.reshape(local_shards * lanes),
+                    logits.reshape(local_shards * lanes, logits.shape[-1]),
+                    ncache)
+
+        f = shard_map(local_step, mesh=mesh,
+                      in_specs=(P(), cache_specs, tok_spec, P()),
+                      out_specs=(tok_spec, tok_spec, cache_specs),
+                      check_replication=False)
+        return f(params, cache, tokens, pos)
+
+    return sharded_step

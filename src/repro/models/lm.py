@@ -86,6 +86,39 @@ class Model:
 
 
 # ============================================================================
+# decode-time TAF sharding (the serving data plane's per-shard knob layout)
+# ============================================================================
+
+# The TAF detector-state leaves of `_taf_init_cache`: per-layer scalars or
+# small vectors with NO batch dim. These are the leaves that become
+# PER-SHARD under a sharded serving engine -- each logical shard runs its
+# own stability detector (window/filled/remaining) and its own traced
+# threshold knob, so a QoS controller can tighten one shard while another
+# keeps approximating, without recompiling. The memo_* leaves already carry
+# the batch dim and shard along it like the KV cache.
+TAF_SHARD_STATE = ("threshold", "window", "filled", "remaining")
+
+
+def shard_taf_state(cache, n_shards: int):
+    """Return `cache` with the TAF detector state replicated per shard.
+
+    Each `TAF_SHARD_STATE` leaf (n_layers, ...) gains a LEADING shard dim:
+    (n_shards, n_layers, ...). `make_sharded_serve_step` vmaps the decode
+    step over that dim, so every shard evolves an independent detector --
+    the batch-global stability statistic (`jnp.mean(delta)` in
+    `_decode_layer_taf`) becomes a per-shard statistic over the shard's own
+    lanes. A no-op for caches without a "taf" entry (precise models).
+    """
+    if "taf" not in cache:
+        return cache
+    taf = dict(cache["taf"])
+    for key in TAF_SHARD_STATE:
+        leaf = taf[key]
+        taf[key] = jnp.broadcast_to(leaf[None], (n_shards,) + leaf.shape)
+    return dict(cache, taf=taf)
+
+
+# ============================================================================
 # transformer families: dense / vlm / moe
 # ============================================================================
 

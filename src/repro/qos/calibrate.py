@@ -68,15 +68,37 @@ def threshold_grid(cfg, thresholds: Sequence[float]) -> List[ApproxSpec]:
             for th in thresholds]
 
 
-def set_decode_threshold(cache, value: float):
+def set_decode_threshold(cache, value):
     """Return `cache` with the decode-TAF threshold knob set to `value`
     (0.0 = precise: RSD < 0 never holds). A hard precise fallback also
     cancels in-flight predictions, otherwise up to prediction_size more
-    approximated layer-steps would run after the knob move."""
+    approximated layer-steps would run after the knob move.
+
+    `value` may be a scalar (every layer -- and, on a sharded cache, every
+    shard -- gets the same knob) or a length-n_shards sequence for a cache
+    whose TAF state has been through `models.lm.shard_taf_state` (leading
+    shard dim): each shard gets its own threshold, and only shards set
+    precise have their in-flight predictions cancelled. Either way this is
+    a pure data write into traced leaves -- never a recompile."""
     taf = dict(cache["taf"])
-    taf["threshold"] = jnp.full_like(taf["threshold"], value)
-    if value == 0.0:
-        taf["remaining"] = jnp.zeros_like(taf["remaining"])
+    th = taf["threshold"]
+    if np.ndim(value) == 0:
+        taf["threshold"] = jnp.full_like(th, value)
+        if float(value) == 0.0:
+            taf["remaining"] = jnp.zeros_like(taf["remaining"])
+        return dict(cache, taf=taf)
+    vals = jnp.asarray(value, th.dtype)
+    if th.ndim < 2 or vals.shape != (th.shape[0],):
+        raise ValueError(
+            f"per-shard thresholds need a sharded TAF cache: got "
+            f"{vals.shape[0] if vals.ndim else '?'} values for threshold "
+            f"leaf of shape {th.shape} (run models.lm.shard_taf_state "
+            f"first)")
+    shape = (vals.shape[0],) + (1,) * (th.ndim - 1)
+    taf["threshold"] = jnp.broadcast_to(vals.reshape(shape), th.shape)
+    rem = taf["remaining"]
+    precise = (vals == 0.0).reshape((vals.shape[0],) + (1,) * (rem.ndim - 1))
+    taf["remaining"] = jnp.where(precise, 0, rem)
     return dict(cache, taf=taf)
 
 

@@ -106,6 +106,21 @@ class QosController:
 
     # ------------------------------------------------------------------
 
+    def rebind_monitor(self, monitor: QualityMonitor) -> None:
+        """Point this controller's evidence reads -- and, crucially, its
+        hard-fallback `reset_window` -- at a different monitor.
+        `QosEngine.enable_sharding` gives each request class its own
+        evidence monitor this way, so one class's fallback no longer wipes
+        the shared window every other class judges its bound against. The
+        metric contract is re-checked, same as at construction."""
+        if monitor.metric != self.target.metric:
+            raise ValueError(
+                f"target metric {self.target.metric!r} does not match the "
+                f"monitor metric {monitor.metric!r}")
+        self.monitor = monitor
+
+    # ------------------------------------------------------------------
+
     def entry(self) -> PolicyEntry:
         return self.policy.entries[self.index]
 

@@ -110,6 +110,14 @@ class QualityMonitor:
         self._record(err)
         return err
 
+    def record(self, error: float) -> None:
+        """Fold an externally scored GENUINE canary error into the window
+        (unlike `inject`, not counted as a fault). The sharded engine's
+        per-class evidence monitors are fed this way: each canary pair is
+        scored ONCE (by the shared monitor's metric) and the resulting
+        error fans out to every class exposed to that shard's knob."""
+        self._record(float(error))
+
     def inject(self, error: float) -> None:
         """Fold a pre-computed canary error into the window. The fault-
         injection hook: tests and the QoS benchmark use it to stage a
@@ -128,6 +136,12 @@ class QualityMonitor:
     # ------------------------------------------------------------------
     # statistics
     # ------------------------------------------------------------------
+
+    @property
+    def window(self) -> int:
+        """Configured window capacity (the deque's maxlen) -- what a clone
+        with the same evidence horizon should be constructed with."""
+        return self._window.maxlen
 
     @property
     def window_size(self) -> int:

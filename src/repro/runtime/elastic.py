@@ -38,6 +38,17 @@ def make_mesh_for(n_devices: Optional[int] = None, model_parallel: int = 16,
     return make_mesh((data, mp), axis_names, devices=devs[: data * mp])
 
 
+def data_mesh_for(n_devices: Optional[int] = None,
+                  axis_names: Sequence[str] = ("data", "model")):
+    """Pure data-parallel mesh for the SERVING data plane: request lanes
+    shard over `data`, TP degree pinned to 1 (decode-time TAF actuates
+    per-shard thresholds, and a model axis would split heads the sharded
+    serve step does not reduce over). Shape selection still flows through
+    `best_mesh_shape`, so elasticity semantics match training: losing a
+    device reshapes to (n-1, 1) and the engine re-plans its shards."""
+    return make_mesh_for(n_devices, model_parallel=1, axis_names=axis_names)
+
+
 def accum_steps_for(global_batch: int, per_device_batch: int,
                     n_data_shards: int) -> int:
     """Keep the global batch constant across elastic reshapes by adjusting

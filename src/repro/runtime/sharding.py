@@ -168,3 +168,51 @@ def cache_shardings(mesh: Mesh, cache: PyTree, batch_size: int) -> PyTree:
 
 def replicated(mesh: Mesh) -> NamedSharding:
     return NamedSharding(mesh, P())
+
+
+# ----------------------------------------------------------------------------
+# serving data plane: decode-cache layout for the sharded serve step
+# ----------------------------------------------------------------------------
+
+def decode_shard_axis(path, shape, batch_size: int) -> Optional[Tuple[str, int]]:
+    """Classify one decode-cache leaf for data-parallel serving.
+
+    Returns ("state", 0) for TAF detector-state leaves (per-shard, leading
+    shard dim added by `models.lm.shard_taf_state`), ("batch", axis) for
+    leaves carrying the request-lane dim (KV cache, TAF memos), or None for
+    replicated leaves. Same caveat as `cache_shardings`: the batch dim is
+    found as the FIRST dim equal to `batch_size`, so engines should avoid
+    slot counts that collide with the layer/head/sequence extents of their
+    cache (e.g. slots == n_layers on a smoke config).
+    """
+    from repro.models.lm import TAF_SHARD_STATE
+    parts = [str(p) for p in path]
+    name = parts[-1].strip("[]'\" .") if parts else ""
+    if any("taf" in p for p in parts) and name in TAF_SHARD_STATE:
+        return ("state", 0)
+    for i, s in enumerate(shape):
+        if s == batch_size:
+            return ("batch", i)
+    return None
+
+
+def decode_partition_specs(mesh: Mesh, cache: PyTree,
+                           batch_size: int) -> PyTree:
+    """PartitionSpec tree for the sharded serve step's cache argument --
+    the shard_map sibling of `cache_shardings` (which builds placement
+    NamedShardings for jit). TAF detector state shards its leading
+    (logical-shard) dim over the data axes; batch-bearing leaves shard the
+    lane dim; everything else replicates.
+    """
+    da = data_axes(mesh)
+    daxis = da if len(da) > 1 else da[0]
+
+    def one(path, leaf):
+        kind = decode_shard_axis(path, leaf.shape, batch_size)
+        if kind is None:
+            return P()
+        spec = [None] * len(leaf.shape)
+        spec[kind[1]] = daxis
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, cache)

@@ -103,10 +103,24 @@ class EngineStats:
 
 
 class ServingEngine:
-    """Slot-based continuous batching over a fixed decode batch size."""
+    """Slot-based continuous batching over a fixed decode batch size.
+
+    Sharded mode (`mesh=`/`devices=`): the decode step runs
+    `shard_map`'d over the mesh's data axes (`make_sharded_serve_step`)
+    with `shards` logical shards of `slots // shards` contiguous lanes
+    each. Logical shards are decoupled from the device count -- any
+    multiple of the mesh's data extent -- so the same engine config runs
+    1-device and 8-device with bit-identical outputs. Each shard carries
+    its own TAF detector state and traced threshold knob; with `qos=`,
+    the control plane is switched to per-shard actuation
+    (`QosEngine.enable_sharding`) and every tick plans, canaries, and
+    updates per shard.
+    """
 
     def __init__(self, model: Model, params, *, slots: int = 4,
-                 max_len: int = 256, prompt_len: int = 32, qos=None):
+                 max_len: int = 256, prompt_len: int = 32, qos=None,
+                 mesh=None, devices: Optional[int] = None,
+                 shards: Optional[int] = None):
         self.model = model
         self.params = params
         self.n_slots = slots
@@ -117,16 +131,64 @@ class ServingEngine:
         self.pos = np.zeros(slots, np.int64)       # next write position
         self.limit = np.zeros(slots, np.int64)     # stop position
         self.stats = EngineStats()
+        if devices is not None and mesh is None:
+            from repro.runtime import elastic
+            if devices > len(jax.devices()):
+                raise ValueError(
+                    f"devices={devices} but only {len(jax.devices())} "
+                    f"visible (set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count=N for a fake "
+                    f"multi-device host)")
+            mesh = elastic.data_mesh_for(devices)
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            from repro.runtime import sharding as shardlib
+            # Commit the params to the mesh ONCE (replicated). Feeding the
+            # sharded step uncommitted single-device arrays makes pjit
+            # re-replicate every leaf on EVERY call -- per-tick
+            # batched_device_put was the whole serving budget (~5ms/tick on
+            # the 8-device CI host) before this landed.
+            self.params = jax.device_put(
+                params, NamedSharding(mesh, PartitionSpec()))
+            da = shardlib.data_axes(mesh)
+            n_data = 1
+            for a in da:
+                n_data *= int(mesh.shape[a])
+            self.n_shards = int(shards) if shards is not None else n_data
+            if self.n_shards < 1 or self.n_shards % n_data:
+                raise ValueError(
+                    f"shards ({self.n_shards}) must be a positive multiple "
+                    f"of the mesh's data extent ({n_data})")
+            if slots % self.n_shards:
+                raise ValueError(
+                    f"slots ({slots}) must divide evenly into "
+                    f"{self.n_shards} shards")
+        else:
+            if shards not in (None, 1):
+                raise ValueError(
+                    "shards needs a mesh (pass devices=1 for a "
+                    "single-device data-parallel mesh)")
+            self.n_shards = 1
+        self.lanes_per_shard = slots // self.n_shards
         # one shared cache sized (slots, max_len); per-slot prefill writes
-        # into its row via the batched prefill below
+        # into its row via the batched prefill below. Prefill stays a
+        # plain jit even in sharded mode: admission cost is per-REQUEST
+        # (not per-token) and its cache output is resharded once.
         self._prefill = jax.jit(steps_mod.make_prefill_step(model, max_len))
-        self._serve = jax.jit(steps_mod.make_serve_step(model))
+        self._lane_write = self._make_lane_write()
+        if mesh is not None:
+            self._serve = jax.jit(steps_mod.make_sharded_serve_step(
+                model, mesh, self.n_shards, slots))
+        else:
+            self._serve = jax.jit(steps_mod.make_serve_step(model))
         self.cache = None
         self.tokens = jnp.zeros((slots,), jnp.int32)
         self.qos = qos
-        self._knob: Optional[float] = None          # last actuated threshold
+        self._knob = None                    # last actuated threshold(s)
         # (tick, threshold) per actuation -- the engine-level knob
-        # trajectory (controller trajectories live on the QosEngine)
+        # trajectory (controller trajectories live on the QosEngine).
+        # Sharded engines log a per-shard tuple per entry.
         self.knob_log: List[tuple] = []
         self._serve_exact = None
         if qos is not None:
@@ -144,25 +206,171 @@ class ServingEngine:
             # the canary oracle: the SAME params through a precise decode
             # step (approx_decode disabled). Its cache layout matches --
             # the extra 'taf' entry rides through the pytree untouched.
+            # In sharded mode the oracle goes through the SAME sharded
+            # wrapper, so its lane->device packing (and therefore its
+            # numerics) match the approximate step bit for bit.
             from repro.models import build
             exact_model = build(dataclasses.replace(
                 model.cfg, approx_decode=ApproxSpec()))
-            self._serve_exact = jax.jit(
-                steps_mod.make_serve_step(exact_model))
+            if mesh is not None:
+                self._serve_exact = jax.jit(
+                    steps_mod.make_sharded_serve_step(
+                        exact_model, mesh, self.n_shards, slots))
+                qos.enable_sharding(self.n_shards)
+            else:
+                self._serve_exact = jax.jit(
+                    steps_mod.make_serve_step(exact_model))
+
+    @property
+    def sharded(self) -> bool:
+        return self.mesh is not None
+
+    @property
+    def mesh_shape(self) -> Optional[tuple]:
+        if self.mesh is None:
+            return None
+        return tuple(int(self.mesh.shape[a]) for a in self.mesh.axis_names)
+
+    def _lane_shard(self, lane: int) -> int:
+        """Shards are contiguous lane ranges: lane -> owning shard."""
+        return lane // self.lanes_per_shard
+
+    @property
+    def _admit_width(self) -> int:
+        """Admission batch width: how many arriving requests one prefill +
+        one cache splice covers. Lanes-per-shard, capped BELOW the full
+        batch -- the splice tells batch rows from batchless detector
+        state by their differing batch extents, so the width must not
+        equal the slot count."""
+        return (self.lanes_per_shard
+                if self.lanes_per_shard < self.n_slots else 1)
+
+    def _make_lane_write(self):
+        """Jitted multi-lane cache surgery: splice a batch-W prefill's
+        rows into the live cache at traced `lanes` (one compile covers
+        every slot combination). Leaves without a batch dim (per-shard
+        detector state, knob thresholds) keep their LIVE values:
+        admission must not reset another lane's quality state or the
+        actuated knob. This is what makes admission cost per-REQUEST
+        instead of per-batch -- the full-batch re-prefill it replaced
+        was ~a whole decode tick of compute per arriving request, threw
+        away every ongoing lane's generated KV, and (on a mesh) stalled
+        every tick of the arrival phase on eager multi-device gathers."""
+        n = self.n_slots
+
+        def write(cache, rows, tokens, row_logits, lanes):
+            w = lanes.shape[0]
+
+            def one(c, r):
+                if c.ndim != r.ndim:
+                    return c        # sharded detector state: per-shard
+                axis = None
+                for ax, (cs, rs) in enumerate(zip(c.shape, r.shape)):
+                    if cs != rs:
+                        if rs == w and cs == n:
+                            axis = ax
+                            break
+                        return c    # non-batch mismatch: keep live state
+                if axis is None:
+                    return c        # batchless leaf (detector state)
+                for j in range(w):  # w is small and static: unrolled
+                    row = jax.lax.dynamic_index_in_dim(r, j, axis,
+                                                       keepdims=True)
+                    c = jax.lax.dynamic_update_slice_in_dim(
+                        c, row.astype(c.dtype), lanes[j], axis)
+                return c
+
+            new_cache = jax.tree_util.tree_map(one, cache, rows)
+            new_toks = jnp.argmax(row_logits, axis=-1).astype(tokens.dtype)
+            # duplicate lanes (padding repeats row 0) carry identical
+            # values, so scatter order cannot matter
+            new_tokens = tokens.at[lanes].set(new_toks)
+            return new_cache, new_tokens
+
+        return jax.jit(write)
+
+    def _place_cache(self, cache):
+        """Commit every cache leaf to its canonical mesh sharding
+        (`decode_partition_specs`): batch leaves over the data axis,
+        detector state over its shard dim, the rest replicated. Leaves
+        already resident under the right sharding pass through untouched,
+        so this is cheap to call after any host-side cache surgery
+        (admission prefill, knob writes) -- and calling it is what keeps
+        the jitted sharded step at ONE sharding signature: mixed
+        committed/uncommitted inputs would both recompile per combination
+        and re-shard every leaf on every tick."""
+        if self.mesh is None or cache is None:
+            return cache
+        from jax.sharding import NamedSharding
+        from repro.runtime import sharding as shardlib
+        specs = shardlib.decode_partition_specs(self.mesh, cache,
+                                                self.n_slots)
+        return jax.tree_util.tree_map(
+            lambda leaf, spec: jax.device_put(
+                leaf, NamedSharding(self.mesh, spec)), cache, specs)
+
+    def _place_tokens(self, tokens):
+        if self.mesh is None:
+            return tokens
+        from jax.sharding import NamedSharding
+        from repro.runtime import sharding as shardlib
+        return jax.device_put(
+            tokens, NamedSharding(self.mesh, shardlib.batch_spec(self.mesh)))
+
+    def _shard_cache(self, cache):
+        """Convert a freshly prefilled cache to the sharded TAF layout
+        (leading shard dim on the detector state) and commit it to the
+        mesh. No-op unsharded."""
+        if self.mesh is None or cache is None:
+            return cache
+        if "taf" in cache:
+            from repro.models.lm import shard_taf_state
+            cache = shard_taf_state(cache, self.n_shards)
+        return self._place_cache(cache)
+
+    def warmup(self):
+        """Compile prefill, serve, and (QoS) the canary oracle on
+        throwaway state, so the first timed tick measures decode, not
+        compilation. Benchmarks call this outside their timed region --
+        the PR 5 review caught single-device compile time polluting
+        throughput, and the sharded step compiles are bigger still.
+        Engine state is untouched."""
+        prompts = jnp.zeros((self.n_slots, self.prompt_len), jnp.int32)
+        logits, cache = self._prefill(self.params, {"tokens": prompts})
+        cache = self._shard_cache(cache)
+        tokens = self._place_tokens(
+            jnp.argmax(logits, axis=-1).astype(jnp.int32))
+        pos = jnp.int32(self.prompt_len)
+        jax.block_until_ready(
+            self._serve(self.params, cache, tokens, pos)[0])
+        if self._serve_exact is not None:
+            jax.block_until_ready(
+                self._serve_exact(self.params, cache, tokens, pos)[0])
+        if self.n_slots > 1:
+            # the admission path: batch-W prefill + multi-lane splice
+            w = self._admit_width
+            row_logits, rows = self._prefill(
+                self.params,
+                {"tokens": jnp.zeros((w, self.prompt_len), jnp.int32)})
+            jax.block_until_ready(self._lane_write(
+                cache, rows, tokens, row_logits,
+                jnp.zeros((w,), jnp.int32))[1])
 
     def submit(self, req: Request):
         req.submitted_at = time.time()
         self.queue.append(req)
 
     def _admit(self):
-        """Fill free slots from the queue. Slot admission re-prefills the
-        whole batch row-set for simplicity (single-host engine); a
-        production multi-host engine prefilling per-slot uses the same
-        cache layout with dynamic_update_slice on the batch dim."""
+        """Fill free slots from the queue. The FIRST admission prefills
+        the whole batch (there is no live cache yet); afterwards each
+        arriving request costs one batch-1 prefill plus a per-lane cache
+        splice (`_make_lane_write`), so admission is per-request work that
+        leaves ongoing lanes' KV, detector state, and the actuated knob
+        untouched -- a production multi-host engine admits the same way."""
         free = [i for i, r in enumerate(self.active) if r is None]
         if not free or not self.queue:
             return
-        changed = False
+        admitted = []
         for i in free:
             if not self.queue:
                 break
@@ -171,32 +379,72 @@ class ServingEngine:
             self.pos[i] = self.prompt_len
             self.limit[i] = min(self.prompt_len + req.max_new_tokens,
                                 self.max_len)
-            changed = True
-        if changed:
+            admitted.append(i)
+        if not admitted:
+            return
+        # batch-1 surgery cannot tell a 1-slot batch dim from batchless
+        # detector state, so 1-slot engines always take the full path
+        if self.cache is None or self.n_slots == 1:
             prompts = np.zeros((self.n_slots, self.prompt_len), np.int32)
             for i, r in enumerate(self.active):
                 if r is not None:
                     p = r.prompt[-self.prompt_len:]
                     prompts[i, -len(p):] = p
-            logits, self.cache = self._prefill(self.params,
-                                               {"tokens": jnp.asarray(prompts)})
-            self.tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-            self._knob = None   # prefill rebuilt the cache: re-actuate
+            logits, cache = self._prefill(self.params,
+                                          {"tokens": jnp.asarray(prompts)})
+            self.cache = self._shard_cache(cache)
+            self.tokens = self._place_tokens(
+                jnp.argmax(logits, axis=-1).astype(jnp.int32))
+            self._knob = None   # fresh cache: actuate on the next plan
+            return
+        cache, tokens = self.cache, self.tokens
+        w = self._admit_width
+        for g in range(0, len(admitted), w):
+            grp = admitted[g:g + w]
+            prompts = np.zeros((w, self.prompt_len), np.int32)
+            lanes = np.zeros((w,), np.int32)
+            for j, i in enumerate(grp):
+                p = self.active[i].prompt[-self.prompt_len:]
+                prompts[j, -len(p):] = p
+                lanes[j] = i
+            # pad short groups by re-writing row 0 (idempotent)
+            for j in range(len(grp), w):
+                prompts[j] = prompts[0]
+                lanes[j] = lanes[0]
+            row_logits, rows = self._prefill(self.params,
+                                             {"tokens": jnp.asarray(prompts)})
+            cache, tokens = self._lane_write(cache, rows, tokens,
+                                             row_logits,
+                                             jnp.asarray(lanes))
+        self.cache = self._place_cache(cache)
+        self.tokens = self._place_tokens(tokens)
 
-    def _apply_knob(self, knob: Optional[float]):
-        """Write the controller-chosen TAF threshold into the decode cache.
+    def _apply_knob(self, knob):
+        """Write the controller-chosen TAF threshold(s) into the decode
+        cache.
 
         The threshold is a traced input of the jitted serve step, so this
         is a pure data write -- no recompilation. `None` (precise) writes
         0.0 AND cancels in-flight predictions ("remaining"), making a hard
         fallback effective on the next token rather than after up to
-        prediction_size more approximated layer-steps.
+        prediction_size more approximated layer-steps. Sharded engines
+        pass a per-shard sequence (`TickPlan.shard_knobs`): each value
+        lands on its shard's row of the threshold leaf, and only shards
+        set precise have their predictions cancelled.
         """
-        val = 0.0 if knob is None else float(knob)
+        if isinstance(knob, (list, tuple)):
+            val = tuple(0.0 if k is None else float(k) for k in knob)
+        else:
+            val = 0.0 if knob is None else float(knob)
         if self.cache is None or val == self._knob:
             return
         from repro.qos import set_decode_threshold
-        self.cache = set_decode_threshold(self.cache, val)
+        # re-commit after the write: the threshold/remaining leaves come
+        # out of host-dispatched jnp ops with default placement, and an
+        # uncommitted leaf in the serve inputs costs a recompile plus a
+        # per-tick re-shard of the whole cache
+        self.cache = self._place_cache(set_decode_threshold(self.cache,
+                                                            val))
         self._knob = val
         # Admission re-prefills rebuild the cache and force a re-apply of
         # the SAME value (self._knob reset to None); that is maintenance,
@@ -214,10 +462,19 @@ class ServingEngine:
         if not live:
             return 0
         lane_classes = []
+        shard_classes = None
         if self.qos is not None:
             lane_classes = [self.active[i].qos_class for i in live]
-            plan = self.qos.plan_tick(lane_classes)
-            self._apply_knob(plan.knob)
+            if self.sharded:
+                shard_classes = [[] for _ in range(self.n_shards)]
+                for i in live:
+                    shard_classes[self._lane_shard(i)].append(
+                        self.active[i].qos_class)
+                plan = self.qos.plan_shards(shard_classes)
+                self._apply_knob(plan.shard_knobs)
+            else:
+                plan = self.qos.plan_tick(lane_classes)
+                self._apply_knob(plan.knob)
         pos = int(self.pos[live].min())  # single shared timeline position
         pre_tokens, pre_cache = self.tokens, self.cache
         self.tokens, logits, self.cache = self._serve(
@@ -229,8 +486,18 @@ class ServingEngine:
             # garbage logits would pollute the quality estimate.
             _, exact_logits, _ = self._serve_exact(
                 self.params, pre_cache, pre_tokens, jnp.int32(pos))
-            self.qos.observe_decode(np.asarray(exact_logits)[live],
-                                    np.asarray(logits)[live], lane_classes)
+            ex, ap = np.asarray(exact_logits), np.asarray(logits)
+            if self.sharded:
+                # per-shard attribution: each shard's slice is scored
+                # separately, so a canary error is credited only to the
+                # shard (and the classes) that ran under that knob
+                for s in range(self.n_shards):
+                    lanes = [i for i in live if self._lane_shard(i) == s]
+                    if lanes:
+                        self.qos.observe_shard(s, ex[lanes], ap[lanes],
+                                               shard_classes[s])
+            else:
+                self.qos.observe_decode(ex[live], ap[live], lane_classes)
             self.stats.canary_ticks += 1
         toks = np.asarray(self.tokens)
         if self.cache is not None and "taf" in self.cache:
@@ -255,7 +522,10 @@ class ServingEngine:
                 self.stats.finished += 1
         self.stats.ticks += 1
         if self.qos is not None:
-            self.qos.update(lane_classes)
+            if self.sharded:
+                self.qos.update_shards(shard_classes)
+            else:
+                self.qos.update(lane_classes)
         return len([r for r in self.active if r is not None])
 
     def run_until_drained(self, max_ticks: int = 10_000) -> EngineStats:

@@ -195,3 +195,83 @@ class TestModelMathProperties:
         np.testing.assert_allclose(float(total),
                                    float(jnp.sum(logz - gold)), rtol=1e-4)
         assert float(count) == b * s
+
+
+# ---------------------------------------------------------------------------
+# QoS ladder / sharded control-plane invariants (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+def _ladder_records(pairs):
+    """Records in the shape `QosPolicy.from_records` consumes: one TAF
+    decode rung per (error, speedup) pair, distinct thresholds."""
+    return [
+        {"app": "taf_decode",
+         "spec": {"technique": "taf", "level": "block", "hSize": 2,
+                  "pSize": 4, "thresh": 0.01 * (i + 1)},
+         "error": float(e), "speedup": float(s),
+         "modeled_speedup": float(s), "workload": {}}
+        for i, (e, s) in enumerate(pairs)]
+
+
+def _policy(pairs):
+    from repro import qos
+    return qos.QosPolicy.from_records(_ladder_records(pairs), metric="mcr")
+
+
+class TestQosLadderProperties:
+    @SET
+    @given(st.lists(st.tuples(st.floats(1e-4, 0.5), st.floats(1.01, 4.0)),
+                    min_size=1, max_size=6),
+           st.floats(1e-4, 0.6), st.floats(0.0, 0.4))
+    def test_selection_monotone_in_error_bound(self, pairs, bound, delta):
+        """Loosening the error bound can only hold or advance the chosen
+        rung -- never retreat it (in index OR in speedup): the qualifying
+        set grows monotonically with the bound."""
+        pol = _policy(pairs)
+        lo, hi = pol.select(bound), pol.select(bound + delta)
+        assert lo <= hi
+        assert pol.entries[lo].speedup <= pol.entries[hi].speedup
+
+    @SET
+    @given(st.lists(st.tuples(st.floats(1e-4, 0.5), st.floats(0.5, 4.0)),
+                    min_size=1, max_size=8))
+    def test_pareto_front_idempotent(self, pairs):
+        """`pareto_front` is a closure operator: re-running it on its own
+        output is the identity."""
+        from repro.core import pareto
+        recs = _ladder_records(pairs)
+        front = pareto.pareto_front(recs)
+        again = pareto.pareto_front(front)
+        key = lambda r: (r["error"], r["speedup"])
+        assert sorted(map(key, again)) == sorted(map(key, front))
+
+    @SET
+    @given(st.integers(2, 6), st.data())
+    def test_strictest_reduction_order_independent(self, n_shards, data):
+        """The strictest-live-rung reduction commutes with any permutation
+        of the shard list: per-shard indices permute along, the global
+        rung is invariant -- min over live shards is order-free."""
+        from repro import qos
+        idx = {c: data.draw(st.integers(0, 3), label=f"idx[{c}]")
+               for c in ("default", "batch")}
+        shard_classes = [
+            data.draw(st.lists(st.sampled_from(["default", "batch"]),
+                               max_size=3), label=f"shard{s}")
+            for s in range(n_shards)]
+        perm = data.draw(st.permutations(range(n_shards)))
+
+        def plan(sc):
+            eng = qos.QosEngine(
+                _policy([(0.005, 1.2), (0.02, 1.5), (0.08, 2.0)]),
+                {"default": 0.10, "batch": 0.5}, sample_fraction=1.0,
+                window=8)
+            eng.enable_sharding(len(sc))
+            for c, i in idx.items():
+                eng.controller(c).index = i
+            return eng.plan_shards(sc)
+
+        p1 = plan(shard_classes)
+        p2 = plan([shard_classes[p] for p in perm])
+        assert p1.index == p2.index
+        assert tuple(p1.shard_indices[p] for p in perm) == p2.shard_indices
+        assert tuple(p1.shard_knobs[p] for p in perm) == p2.shard_knobs
