@@ -1,0 +1,53 @@
+"""approxlint as a benchmark module: one static-analysis pass over every
+app group, reported in the harness's CSV rows.
+
+The "measurement" here is the analyzer itself -- wall time of the full
+pass plus the finding counts it produced. A non-zero error count (or a
+crashed rule) is reported as a FAIL row so it is visible in the CSV, and
+the regression gate pins the counts exactly via ``BENCH_lint.json``: a
+new finding OR a new allowlist entry both show up as baseline drift and
+must be reviewed, not slipped in. With ``artifacts_dir``, the full
+machine-readable findings report (every finding, every allowlisted
+finding with its reason, every rule crash) is written to
+``<artifacts_dir>/BENCH_lint.json`` so CI can upload it as a build
+artifact and commits are diffable finding-by-finding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Optional
+
+
+def main(report, artifacts_dir: Optional[str] = None):
+    from repro.analysis.findings import Allowlist, default_allowlist_path
+    from repro.analysis.lint import run_lint
+
+    allow_path = default_allowlist_path(os.path.dirname(__file__))
+    allow = Allowlist.load(allow_path) if allow_path else None
+    t0 = time.perf_counter()
+    rep = run_lint(allowlist=allow)   # all app groups, no policies
+    us = (time.perf_counter() - t0) * 1e6
+
+    doc = rep.to_json()
+    doc["metric"] = "approxlint"
+    s = doc["summary"]
+    report("lint_pass", f"{us:.0f}",
+           f"findings={s['total']} allowlisted={s['allowlisted']}")
+    for rule, n in sorted(s["by_rule"].items()):
+        report(f"lint_{rule}", f"{us:.0f}", f"n={n}")
+    if rep.errors:
+        report("lint_rule_crash", "FAIL", "; ".join(rep.errors)[:200])
+    if s["errors"]:
+        subjects = ", ".join(sorted(
+            f"{f['rule']} {f['subject']}" for f in doc["findings"]
+            if f["severity"] == "error"))
+        report("lint_errors", "FAIL", subjects[:200])
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        out = os.path.join(artifacts_dir, "BENCH_lint.json")
+        with open(out, "w") as f:
+            json.dump(doc, f, indent=1, sort_keys=True)
+        report("lint_artifact", f"{us:.0f}", out)

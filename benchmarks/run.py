@@ -46,7 +46,7 @@ sys.path.insert(0, "examples")
 from . import (approx_ffn_sweep, fig3_table_memory, fig6_best_speedup,
                fig7_cg_sweep, fig8c_items_per_thread, fig10c_rsd_behavior,
                fig11c_hierarchy, fig12c_kmeans_convergence, kernel_micro,
-               pareto_refine, qos_serving, roofline_table)
+               lint, pareto_refine, qos_serving, roofline_table)
 
 MODULES = {
     "fig3": fig3_table_memory,
@@ -57,6 +57,7 @@ MODULES = {
     "fig11c": fig11c_hierarchy,
     "fig12c": fig12c_kmeans_convergence,
     "kernel": kernel_micro,
+    "lint": lint,
     "ffn": approx_ffn_sweep,
     "pareto": pareto_refine,
     "qos": qos_serving,
@@ -104,6 +105,15 @@ _BASELINE_CHECKS = {
                   "parity.perfo"),
         "close": ("front.n_front", "front.hypervolume", "front.best_error",
                   "front.best_speedup"),
+        "atleast": (),
+    },
+    # approxlint must stay CLEAN, and the allowlist may only grow through
+    # a reviewed baseline bump: a new finding, a crashed rule, or a new
+    # allow entry all drift from the committed counts and fail the gate.
+    "BENCH_lint.json": {
+        "exact": ("metric", "summary.total", "summary.errors",
+                  "summary.warnings", "summary.allowlisted"),
+        "close": (),
         "atleast": (),
     },
 }
@@ -252,6 +262,13 @@ def main() -> None:
         for f in fails:
             report("regression", "FAIL", f)
         if fails:
+            # name the offending artifact:metric pairs on stderr too --
+            # CI log scrapers (and humans skimming a red job) should not
+            # have to fish the failure out of the CSV stream
+            print(f"regression gate FAILED ({len(fails)} check(s)):",
+                  file=sys.stderr)
+            for f in fails:
+                print(f"  {f}", file=sys.stderr)
             sys.exit(2)
         report("regression", "OK",
                f"artifacts match {args.check_regression} "

@@ -1,0 +1,33 @@
+"""approxlint: jaxpr-level static analysis for approximation regions,
+kernels, QoS ladders, and the serving data plane.
+
+The HPAC-Offload compiler validates approximation directives before the
+GPU runs them; this package is that stage for the JAX substrate. Rules:
+
+  A001  recompile-leak: a quality knob shapes the compiled artifact
+  A002  substrate/kernel misconfiguration
+  A003  unsafe approximation sink (taint into control flow / indices)
+  A004  QoS ladder validity (saved policy files)
+  A005  sharding placement (uncommitted leaves into the sharded step)
+
+CLI: ``python -m repro.analysis.lint --apps all`` (docs/analysis.md).
+Programmatic: `run_lint`; opt-in hooks: `harness.run_specs(lint=True)`,
+`ServingEngine(..., lint=True)`.
+"""
+from .findings import Allowlist, Finding, Report, Severity  # noqa: F401
+
+RULE_IDS = ("A001", "A002", "A003", "A004", "A005")
+
+
+def __getattr__(name):
+    # Lazy: `python -m repro.analysis.lint` imports this package first, and
+    # an eager `from .lint import ...` here would both trigger runpy's
+    # double-import warning and pull jax-heavy rule modules into callers
+    # that only want the Finding/Report types.
+    if name == "run_lint":
+        from .lint import run_lint
+        return run_lint
+    if name in ("check_engine_placement", "check_policy_file"):
+        from . import rules
+        return getattr(rules, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

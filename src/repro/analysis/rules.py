@@ -1,0 +1,475 @@
+"""The approxlint rules: A001-A005.
+
+Every rule is a function `(config) -> List[Finding]` over the target
+registry (`targets.py`). Rules trace, they do not execute -- except A005,
+whose subject (mesh placement) only exists on concrete arrays.
+
+  A001 recompile-leak            quality knob shapes the compiled artifact
+  A002 substrate misconfiguration  kernel/grid/geometry/benchmark wiring
+  A003 unsafe approximation sink   approximate values steering control flow
+  A004 QoS ladder validity         saved policy files break the ladder
+                                   invariants the controller relies on
+  A005 sharding placement          leaves entering the sharded serve step
+                                   without mesh commitment
+"""
+from __future__ import annotations
+
+import glob as glob_mod
+import json
+import os
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import taint as taint_mod
+from . import targets as targets_mod
+from . import trace as trace_mod
+from .findings import Finding, Severity
+
+_KNOB_FIELDS = ("thresh", "fraction")  # quality-knob keys in the spec dict
+
+
+def _repo_root() -> str:
+    # this file lives at <root>/src/repro/analysis/rules.py (`repro` is a
+    # namespace package, so its own __file__ is None)
+    here = os.path.abspath(__file__)
+    return os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(here))))
+
+
+# --------------------------------------------------------------------------
+# A001 -- recompile leak
+# --------------------------------------------------------------------------
+
+def _probe_targets(knob_targets) -> List[Finding]:
+    out = []
+    for t in knob_targets:
+        try:
+            fn = t.build()
+        except Exception as e:  # noqa: BLE001
+            out.append(Finding(
+                "A001", Severity.WARNING, t.subject,
+                "knob target failed to build (cannot verify tracing)",
+                {"error": f"{type(e).__name__}: {e}"[:500]}))
+            continue
+        res = trace_mod.probe_knob(fn, t.values)
+        if res.verdict == "static":
+            out.append(Finding(
+                "A001", Severity.ERROR, t.subject,
+                "quality knob is a STATIC argument: every knob value is a "
+                "fresh compile (or an outright trace failure)",
+                {"trace_error": res.error}))
+        elif res.verdict == "baked":
+            out.append(Finding(
+                "A001", Severity.ERROR, t.subject,
+                "quality knob is BAKED into the program as a constant: "
+                "sweeping it recompiles",
+                {"jaxpr_diff": res.diff_excerpt}))
+        elif res.verdict == "error":
+            out.append(Finding(
+                "A001", Severity.WARNING, t.subject,
+                "knob trace crashed (neither clean nor a known leak shape)",
+                {"error": res.error}))
+    return out
+
+
+def check_spec_grouping(specs, subject_prefix: str = "grids"
+                        ) -> List[Finding]:
+    """Host-side A001 over a spec population: specs that differ ONLY in
+    their quality knob must share a batching static_key (one compile per
+    structural group). A knob field leaking into `static_key` would give
+    every grid point its own compile -- the PR 3 recompile storm. Pure
+    host-side dict/tuple work; nothing traces. The `harness.run_specs`
+    lint hook runs this over the caller's actual specs."""
+    from repro.core import batching, harness
+    from repro.core.perforation import FRACTION_KINDS
+    from repro.core.types import Technique
+
+    findings = []
+    groups: Dict[str, set] = {}
+    for spec in specs:
+        d = harness.spec_to_dict(spec)
+        key = batching.static_key(spec)
+        tech = spec.technique
+        fraction_perfo = (tech == Technique.PERFORATION
+                          and spec.perforation.kind in FRACTION_KINDS)
+        if tech in (Technique.TAF, Technique.IACT) or fraction_perfo:
+            if key is None:
+                findings.append(Finding(
+                    "A001", Severity.ERROR,
+                    f"{subject_prefix}.{tech.value}",
+                    "spec has a traced quality knob but no batching "
+                    "static_key: it falls out of the grouped runner and "
+                    "compiles per grid point", {"spec": d}))
+                continue
+            stripped = json.dumps(
+                {k: v for k, v in d.items() if k not in _KNOB_FIELDS},
+                sort_keys=True)
+            groups.setdefault(stripped, set()).add(key)
+    for stripped, keys in groups.items():
+        if len(keys) > 1:
+            findings.append(Finding(
+                "A001", Severity.ERROR, f"{subject_prefix}.static_key",
+                "specs differing only in their quality knob map to "
+                "DIFFERENT static keys: the knob leaks into the compiled "
+                "structure", {"structural_group": stripped,
+                              "keys": sorted(map(str, keys))}))
+    return findings
+
+
+def rule_a001(apps: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    if "kernels" in apps:
+        findings += _probe_targets(targets_mod.kernel_knob_targets())
+    if "regions" in apps:
+        findings += _probe_targets(targets_mod.region_knob_targets())
+    if "ffn" in apps:
+        findings += check_spec_grouping(targets_mod.default_grids())
+    if "decode" in apps:
+        findings += _probe_targets([targets_mod.serve_knob_target()])
+    return findings
+
+
+# --------------------------------------------------------------------------
+# A002 -- substrate / kernel misconfiguration
+# --------------------------------------------------------------------------
+
+def _check_kernel_configs() -> List[Finding]:
+    findings = []
+    for t in targets_mod.kernel_trace_targets():
+        try:
+            fn, args = t.build()
+            jax.make_jaxpr(fn)(*args)
+        except Exception as e:  # noqa: BLE001
+            findings.append(Finding(
+                "A002", Severity.ERROR, t.subject,
+                "kernel fails to trace at its registered config "
+                "(scalar-prefetch arity / BlockSpec / divisibility)",
+                {"error": f"{type(e).__name__}: {e}"[:500]}))
+    return findings
+
+
+def _check_ffn_geometry() -> List[Finding]:
+    findings = []
+    try:
+        geo = targets_mod.ffn_geometry()
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A002", Severity.WARNING, "ffn.geometry",
+                        "approx_ffn app unimportable; geometry unchecked",
+                        {"error": f"{type(e).__name__}: {e}"[:300]})]
+    seq = geo["seq"]
+    for name in ("block_m", "block_rows", "block_attn"):
+        if seq % geo[name]:
+            findings.append(Finding(
+                "A002", Severity.ERROR, f"ffn.geometry.{name}",
+                f"app sequence length {seq} is not divisible by "
+                f"{name}={geo[name]}: the Pallas path asserts at run time",
+                {"seq": seq, name: geo[name]}))
+    return findings
+
+
+def _check_benchmarks_wiring() -> List[Finding]:
+    import inspect
+    import sys
+    root = _repo_root()
+    for p in (root, os.path.join(root, "examples")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+    try:
+        from benchmarks import run as bench_run
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A002", Severity.INFO, "benchmarks.run",
+                        "benchmarks package unimportable from here; "
+                        "wiring unchecked",
+                        {"error": f"{type(e).__name__}: {e}"[:300]})]
+    findings = []
+    support = bench_run.substrate_support()
+    for key, mod in bench_run.MODULES.items():
+        if key not in support:
+            findings.append(Finding(
+                "A002", Severity.ERROR, f"benchmarks.{key}",
+                "module registered in MODULES but missing from the "
+                "substrate_support table", {}))
+            continue
+        declares = "substrate" in inspect.signature(mod.main).parameters
+        if key == "kernel":
+            if support[key] != {"pallas"}:
+                findings.append(Finding(
+                    "A002", Severity.ERROR, "benchmarks.kernel",
+                    "kernel_micro is pallas-native; its support entry "
+                    "must be exactly {'pallas'}",
+                    {"entry": sorted(support[key])}))
+        elif declares and support[key] != {"host", "pallas"}:
+            findings.append(Finding(
+                "A002", Severity.ERROR, f"benchmarks.{key}",
+                "module's main() accepts substrate= but the support "
+                "table does not offer both substrates",
+                {"entry": sorted(support[key])}))
+        elif not declares and support[key] != {"host"}:
+            findings.append(Finding(
+                "A002", Severity.ERROR, f"benchmarks.{key}",
+                "module's main() has no substrate parameter but the "
+                "support table claims substrate choice",
+                {"entry": sorted(support[key])}))
+    base_dir = os.path.join(root, "benchmarks", "baselines")
+    for bf in sorted(glob_mod.glob(os.path.join(base_dir, "BENCH_*.json"))):
+        name = os.path.basename(bf)
+        if name not in bench_run._BASELINE_CHECKS:
+            findings.append(Finding(
+                "A002", Severity.ERROR, f"benchmarks.baselines.{name}",
+                "committed baseline has no check rules in "
+                "_BASELINE_CHECKS: --check-regression would fail on it",
+                {"path": bf}))
+    for name in bench_run._BASELINE_CHECKS:
+        if not os.path.exists(os.path.join(base_dir, name)):
+            findings.append(Finding(
+                "A002", Severity.WARNING, f"benchmarks.baselines.{name}",
+                "check rules registered but no committed baseline file",
+                {"expected": os.path.join(base_dir, name)}))
+    return findings
+
+
+def rule_a002(apps: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    if "kernels" in apps:
+        findings += _check_kernel_configs()
+    if "ffn" in apps:
+        findings += _check_ffn_geometry()
+        findings += _check_benchmarks_wiring()
+    return findings
+
+
+# --------------------------------------------------------------------------
+# A003 -- unsafe approximation sink
+# --------------------------------------------------------------------------
+
+def _taint_one(t: targets_mod.TraceTarget) -> List[Finding]:
+    try:
+        fn, args = t.build()
+        closed = jax.make_jaxpr(fn)(*args)
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A003", Severity.WARNING, t.subject,
+                        "taint target failed to trace",
+                        {"error": f"{type(e).__name__}: {e}"[:500]})]
+    positions = targets_mod.tainted_positions(args, t.tainted)
+    if not positions:
+        return [Finding("A003", Severity.WARNING, t.subject,
+                        "no tainted source leaves matched "
+                        f"{t.tainted}: the walk checked nothing", {})]
+    sinks = taint_mod.find_taint_sinks(closed, positions)
+    return [Finding(
+        "A003", Severity.ERROR, f"{t.subject}{s.path}",
+        f"approximate value reaches a {s.kind} (`{s.primitive}`) with no "
+        "precise fallback: a 1-ulp error becomes a discontinuous "
+        "program change",
+        {"eqn": s.eqn_repr, "sources": list(t.tainted)}) for s in sinks]
+
+
+def rule_a003(apps: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    if "regions" in apps:
+        for t in targets_mod.region_taint_targets():
+            findings += _taint_one(t)
+    if "decode" in apps:
+        findings += _taint_one(targets_mod.serve_taint_target())
+    return findings
+
+
+# --------------------------------------------------------------------------
+# A004 -- QoS ladder validity (raw saved-policy files)
+# --------------------------------------------------------------------------
+
+def check_policy_file(path: str,
+                      model_taf: Optional[Tuple[int, int]] = None
+                      ) -> List[Finding]:
+    """Lint ONE saved QosPolicy file, on its RAW entries. `QosPolicy.load`
+    re-normalizes the ladder on construction, so a broken file silently
+    self-heals at load time -- which is exactly why the linter must read
+    the JSON, not the loaded object: a policy that needs healing is a
+    policy whose shipped artifact misdescribes what will run."""
+    sub = f"policy:{path}"
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A004", Severity.ERROR, sub,
+                        "policy file unreadable",
+                        {"error": f"{type(e).__name__}: {e}"[:300]})]
+    return check_policy_document(doc, subject=sub, model_taf=model_taf)
+
+
+def check_policy_document(doc: Dict, *, subject: str = "policy",
+                          model_taf: Optional[Tuple[int, int]] = None
+                          ) -> List[Finding]:
+    """The A004 ladder checks over a policy JSON document (the
+    `QosPolicy.to_json` schema). Shared by the file pass above and the
+    `ServingEngine(lint=True)` hook."""
+    from repro.core.harness import spec_from_dict, spec_hash
+    from repro.qos.policy import spec_knob
+
+    sub = subject
+    entries = doc.get("entries", [])
+    if not entries:
+        return [Finding("A004", Severity.ERROR, sub,
+                        "policy has no entries (not even the precise rung)",
+                        {})]
+    use_modeled = bool(doc.get("use_modeled", False))
+    perf_key = "modeled_speedup" if use_modeled else "speedup"
+    findings: List[Finding] = []
+
+    e0 = entries[0]
+    if e0.get("spec", {}).get("technique", "none") != "none" or \
+            e0.get("error", 1.0) != 0.0 or e0.get(perf_key, 0.0) != 1.0:
+        findings.append(Finding(
+            "A004", Severity.ERROR, f"{sub}#rung0",
+            "rung 0 must be the precise anchor (technique none, error 0, "
+            "speedup 1): the controller's hard fallback lands here",
+            {"rung0": e0}))
+
+    seen_hash: Dict[str, int] = {}
+    structural: Dict[Tuple[int, int], List[int]] = {}
+    for i, e in enumerate(entries):
+        rsub = f"{sub}#rung{i}"
+        spec_d = e.get("spec", {})
+        err, perf = e.get("error"), e.get(perf_key)
+        precise = spec_d.get("technique", "none") == "none"
+        if i > 0 and precise:
+            findings.append(Finding(
+                "A004", Severity.ERROR, rsub,
+                "precise spec on a non-zero rung (duplicate anchor)", {}))
+        if i > 0 and isinstance(perf, (int, float)) and perf <= 1.0:
+            findings.append(Finding(
+                "A004", Severity.ERROR, rsub,
+                "rung pays quality for <= 1x speedup: dominated by the "
+                "precise rung", {"error": err, perf_key: perf}))
+        stored = e.get("spec_hash", "")
+        actual = spec_hash(spec_d)
+        if stored and stored != actual:
+            findings.append(Finding(
+                "A004", Severity.ERROR, rsub,
+                "stored spec_hash does not match the spec (stale or "
+                "hand-edited entry)",
+                {"stored": stored, "recomputed": actual}))
+        if actual in seen_hash:
+            findings.append(Finding(
+                "A004", Severity.ERROR, rsub,
+                f"duplicate spec (same spec_hash as rung "
+                f"{seen_hash[actual]})", {"spec_hash": actual}))
+        else:
+            seen_hash[actual] = i
+        try:
+            spec = spec_from_dict(spec_d)
+            spec_knob(spec)
+        except Exception as ex:  # noqa: BLE001
+            findings.append(Finding(
+                "A004", Severity.ERROR, rsub,
+                "spec is unparseable or has no online-actuable knob",
+                {"error": f"{type(ex).__name__}: {ex}"[:300],
+                 "spec": spec_d}))
+            continue
+        if spec_d.get("technique") == "taf":
+            structural.setdefault(
+                (int(spec_d.get("hSize", -1)), int(spec_d.get("pSize", -1))),
+                []).append(i)
+
+    for i in range(1, len(entries)):
+        for j in range(i + 1, len(entries)):
+            ei, ej = entries[i], entries[j]
+            erri, errj = ei.get("error"), ej.get("error")
+            pi, pj = ei.get(perf_key), ej.get(perf_key)
+            if None in (erri, errj, pi, pj):
+                continue
+            if errj >= erri and pj <= pi:
+                findings.append(Finding(
+                    "A004", Severity.ERROR, f"{sub}#rung{j}",
+                    f"rung dominated by rung {i} (more error, no more "
+                    "speedup): 'one rung away is strictly faster' breaks",
+                    {"rung": {"error": errj, perf_key: pj},
+                     "dominator": {"error": erri, perf_key: pi}}))
+            elif errj <= erri:
+                findings.append(Finding(
+                    "A004", Severity.ERROR, f"{sub}#rung{j}",
+                    f"ladder not ascending in error after rung {i}: "
+                    "'one rung toward 0 is strictly quality-improving' "
+                    "breaks",
+                    {"errors": [erri, errj]}))
+
+    if len(structural) > 1:
+        findings.append(Finding(
+            "A004", Severity.ERROR, f"{sub}#ladder",
+            "TAF rungs disagree on structural (history, prediction) "
+            "params: they describe different stability detectors",
+            {"groups": {str(k): v for k, v in structural.items()}}))
+    if model_taf is not None and structural:
+        mism = {k: v for k, v in structural.items() if k != tuple(model_taf)}
+        if mism:
+            findings.append(Finding(
+                "A004", Severity.ERROR, f"{sub}#ladder",
+                f"TAF rungs calibrated under structural params "
+                f"{sorted(mism)} but the target model runs "
+                f"{tuple(model_taf)}: offline error misdescribes the "
+                "running decode step",
+                {"rungs": sorted(v2 for v in mism.values() for v2 in v)}))
+    return findings
+
+
+def rule_a004(policy_paths: Sequence[str],
+              model_taf: Optional[Tuple[int, int]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in policy_paths:
+        findings += check_policy_file(path, model_taf=model_taf)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# A005 -- sharding placement
+# --------------------------------------------------------------------------
+
+def check_engine_placement(engine) -> List[Finding]:
+    """Audit every leaf entering the engine's sharded serve step for mesh
+    commitment. Uncommitted leaves make pjit re-shard (and possibly
+    recompile) EVERY tick -- the PR 6 data-plane bug, generalized."""
+    from jax.sharding import NamedSharding
+
+    if engine.mesh is None:
+        return []
+    findings = []
+    surfaces = {"params": engine.params, "cache": engine.cache,
+                "tokens": engine.tokens}
+    for name, tree in surfaces.items():
+        if tree is None:
+            continue
+        bad = []
+        for path, leaf in targets_mod.leaf_paths(tree):
+            if not hasattr(leaf, "sharding"):
+                continue
+            sh = leaf.sharding
+            if not (isinstance(sh, NamedSharding)
+                    and sh.mesh.shape == engine.mesh.shape
+                    and sh.mesh.axis_names == engine.mesh.axis_names):
+                bad.append((path, type(sh).__name__))
+        if bad:
+            findings.append(Finding(
+                "A005", Severity.ERROR, f"serving.engine.{name}",
+                f"{len(bad)} leaf/leaves enter the shard_map'd serve step "
+                "without mesh commitment: pjit re-shards them every tick",
+                {"leaves": bad[:8],
+                 "mesh": dict(engine.mesh.shape)}))
+    return findings
+
+
+def rule_a005(apps: Sequence[str]) -> List[Finding]:
+    if "decode" not in apps:
+        return []
+    try:
+        engine = targets_mod.engine_fixture()
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A005", Severity.WARNING, "serving.engine",
+                        "engine fixture failed to build; placement "
+                        "unchecked",
+                        {"error": f"{type(e).__name__}: {e}"[:500]})]
+    return check_engine_placement(engine)
+
+
+RULE_IDS = ("A001", "A002", "A003", "A004", "A005")

@@ -1,0 +1,354 @@
+"""The built-in lint targets: what approxlint analyzes out of the box.
+
+Each target is the *smallest* configuration that exercises a lintable
+surface -- tiny shapes, interpret-mode kernels, the smoke decode config --
+because the rules only TRACE (``jax.make_jaxpr``); nothing here is sized
+for throughput. Targets are grouped into named "apps" so the CLI's
+``--apps`` flag can scope a run:
+
+  kernels  -- the four Pallas kernels' quality knobs (A001) and their
+              trace-time configuration (A002)
+  regions  -- ApproxRegion step hooks + perforated_loop's fraction (A001)
+              and their traced jaxprs (A003)
+  ffn      -- the approx_ffn example app's block geometry (A002) and the
+              default sweep grids' batching behavior (A001)
+  decode   -- the serving decode step: knob tracing (A001), taint (A003),
+              and engine mesh placement (A005). The only group that runs
+              real (tiny) computation: A005 checks *placements*, which
+              exist only on concrete arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+APP_NAMES = ("kernels", "regions", "ffn", "decode")
+
+
+@dataclasses.dataclass(frozen=True)
+class KnobTarget:
+    """One quality knob on one target: `build()` returns a function of a
+    single scalar, traced by rules.probe (A001)."""
+
+    subject: str
+    build: Callable[[], Callable]
+    values: Tuple[float, ...] = (0.25, 0.75)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceTarget:
+    """A traceable program for structural rules (A002 config-trace, A003
+    taint). `build()` returns (fn, example_args); `tainted` names the
+    approximate-value leaves by path substring."""
+
+    subject: str
+    build: Callable[[], Tuple[Callable, tuple]]
+    tainted: Tuple[str, ...] = ()
+
+
+# --------------------------------------------------------------------------
+# kernels
+# --------------------------------------------------------------------------
+
+def _kernel_data(m=16, k=16, n=16):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(m, k), jnp.float32)
+    w = jnp.asarray(rng.randn(k, n), jnp.float32)
+    return x, w
+
+
+def kernel_knob_targets() -> List[KnobTarget]:
+    from repro.core.types import PerforationKind, PerforationParams
+    from repro.kernels import iact_memo, perforated_attention, \
+        perforated_matmul, taf_matmul
+
+    def taf():
+        x, w = _kernel_data()
+        return lambda th: taf_matmul.taf_matmul(
+            x, w, block_m=8, block_n=8, history_size=2, prediction_size=2,
+            rsd_threshold=th, interpret=True)
+
+    def iact():
+        x, _ = _kernel_data()
+        rng = np.random.RandomState(1)
+        w1 = jnp.asarray(rng.randn(16, 8), jnp.float32)
+        w2 = jnp.asarray(rng.randn(8, 16), jnp.float32)
+        return lambda th: iact_memo.iact_rowfn(
+            x, w1, w2, block_rows=8, table_size=2, threshold=th,
+            interpret=True)
+
+    def attn():
+        rng = np.random.RandomState(2)
+        q = jnp.asarray(rng.randn(1, 1, 16, 8), jnp.float32)
+        kv = jnp.asarray(rng.randn(1, 1, 16, 8), jnp.float32)
+        p = PerforationParams(kind=PerforationKind.INI, fraction=0.0)
+        return lambda f: perforated_attention.perforated_attention(
+            q, kv, kv, block_q=8, block_kv=8, perfo=p, fraction=f,
+            interpret=True)
+
+    def pmm():
+        x, w = _kernel_data()
+        p = PerforationParams(kind=PerforationKind.INI, fraction=0.0)
+        return lambda f: perforated_matmul.perforated_matmul(
+            x, w, block_m=8, block_n=8, block_k=8, perfo=p, fraction=f,
+            rescale=True, interpret=True)
+
+    def pmm_structural():
+        x, w = _kernel_data()
+
+        def run(f):
+            p = PerforationParams(kind=PerforationKind.INI,
+                                  fraction=float(f))
+            return perforated_matmul.perforated_matmul(
+                x, w, block_m=8, block_n=8, block_k=8, perfo=p,
+                interpret=True)
+
+        return run
+
+    def attn_structural():
+        rng = np.random.RandomState(2)
+        q = jnp.asarray(rng.randn(1, 1, 16, 8), jnp.float32)
+        kv = jnp.asarray(rng.randn(1, 1, 16, 8), jnp.float32)
+
+        def run(f):
+            p = PerforationParams(kind=PerforationKind.INI,
+                                  fraction=float(f))
+            return perforated_attention.perforated_attention(
+                q, kv, kv, block_q=8, block_kv=8, perfo=p, interpret=True)
+
+        return run
+
+    return [
+        KnobTarget("kernels.taf_matmul.rsd_threshold", taf),
+        KnobTarget("kernels.iact_memo.threshold", iact),
+        KnobTarget("kernels.perforated_attention.fraction", attn),
+        KnobTarget("kernels.perforated_matmul.fraction", pmm),
+        # Structural perforation mode: the kept set SHAPES the grid -- the
+        # herded payoff (dropped blocks are never scheduled). A001 flags it
+        # as static by construction; the repo allowlist records it as
+        # intentional, pointing sweeps at the masked fraction= mode.
+        KnobTarget("kernels.perforated_matmul.perfo", pmm_structural),
+        KnobTarget("kernels.perforated_attention.perfo", attn_structural),
+    ]
+
+
+def kernel_trace_targets() -> List[TraceTarget]:
+    """Each kernel traced at a registered tiny config. `pallas_call`
+    traces the kernel body, so a scalar-prefetch arity mismatch, a
+    BlockSpec/index-map rank error, or a block-vs-array divisibility bug
+    surfaces at trace time -- no execution (A002)."""
+    targets = []
+    for t in kernel_knob_targets():
+        def build(t=t):
+            fn = t.build()
+            # plain python float: the structural-mode targets concretize
+            # their knob (that is the point), and every kernel accepts a
+            # python-float knob
+            return (lambda: fn(float(t.values[0]))), ()
+        targets.append(TraceTarget(t.subject.rsplit(".", 1)[0] + ".config",
+                                   build))
+    return targets
+
+
+# --------------------------------------------------------------------------
+# regions
+# --------------------------------------------------------------------------
+
+def region_knob_targets() -> List[KnobTarget]:
+    from repro.core.approx import ApproxRegion, perforated_loop
+    from repro.core.types import (ApproxSpec, IACTParams, PerforationKind,
+                                  PerforationParams, TAFParams, Technique)
+
+    def taf():
+        spec = ApproxSpec(Technique.TAF, taf=TAFParams(2, 4, 0.5))
+        region = ApproxRegion(spec, lambda x: x * 2.0, n_elements=8,
+                              substrate="host")
+        state = region.init_state()
+        x = jnp.ones((8,), jnp.float32)
+        return lambda th: region.step(state, x, rsd_threshold=th)
+
+    def iact():
+        spec = ApproxSpec(Technique.IACT, iact=IACTParams())
+        region = ApproxRegion(spec, lambda x: x * 2.0, n_elements=8,
+                              in_dim=1, substrate="host")
+        state = region.init_state()
+        x = jnp.ones((8,), jnp.float32)
+        return lambda th: region.step(state, x, threshold=th)
+
+    def perfo():
+        spec = ApproxSpec(
+            Technique.PERFORATION,
+            perforation=PerforationParams(kind=PerforationKind.INI,
+                                          fraction=0.0))
+        body = lambda i, c: c + jnp.float32(i)
+        return lambda f: perforated_loop(spec, 8, body, jnp.float32(0.0),
+                                         fraction=f)[0]
+
+    def perfo_skip():
+        body = lambda i, c: c + jnp.float32(i)
+
+        def run(s):
+            spec = ApproxSpec(
+                Technique.PERFORATION,
+                perforation=PerforationParams(kind=PerforationKind.SMALL,
+                                              skip=int(s)))
+            return perforated_loop(spec, 8, body, jnp.float32(0.0))[0]
+
+        return run
+
+    return [
+        KnobTarget("regions.taf.rsd_threshold", taf),
+        KnobTarget("regions.iact.threshold", iact),
+        KnobTarget("regions.perforated_loop.fraction", perfo),
+        # skip-driven perforation's knob is the loop structure itself;
+        # allowlisted as intentional (see .approxlint.json)
+        KnobTarget("regions.perforated_loop.skip", perfo_skip,
+                   values=(2.0, 4.0)),
+    ]
+
+
+def region_taint_targets() -> List[TraceTarget]:
+    """Region steps with their MEMOIZED-VALUE state leaves tainted: the
+    approximate outputs must not steer control flow or indexing (A003).
+    Detector state (windows, counters) is deliberately NOT a source -- the
+    detector steering a cond is the approximation mechanism itself."""
+    from repro.core.approx import ApproxRegion
+    from repro.core.types import ApproxSpec, TAFParams, Technique
+
+    def taf():
+        spec = ApproxSpec(Technique.TAF, taf=TAFParams(2, 4, 0.5))
+        region = ApproxRegion(spec, lambda x: x * 2.0, n_elements=8,
+                              substrate="host")
+        state = region.init_state()
+        x = jnp.ones((8,), jnp.float32)
+        fn = lambda st, xx: region.step(st, xx, rsd_threshold=jnp.float32(0.5))
+        return fn, (state, x)
+
+    return [TraceTarget("regions.taf.step", taf, tainted=("memo",))]
+
+
+# --------------------------------------------------------------------------
+# ffn app geometry + sweep grids
+# --------------------------------------------------------------------------
+
+def default_grids():
+    """The union Table-2 grid the sweep benchmarks actually run -- the
+    spec population whose batched grouping A001 checks host-side."""
+    from repro.core import harness
+    return (list(harness.taf_grid()) + list(harness.iact_grid())
+            + list(harness.perfo_grid()))
+
+
+def ffn_geometry() -> Dict[str, int]:
+    """The approx_ffn example's block geometry vs its array shapes --
+    the divisibility preconditions its Pallas path asserts at run time,
+    lifted to lint time (A002)."""
+    import os
+    import sys
+    examples_dir = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))), "examples")
+    if examples_dir not in sys.path:
+        sys.path.insert(0, examples_dir)
+    from apps import approx_ffn
+    return {
+        "seq": 128, "d": 32, "d_h": 64,
+        "block_m": approx_ffn._BLOCK_M,
+        "block_rows": approx_ffn._BLOCK_ROWS,
+        "block_attn": approx_ffn._BLOCK_ATTN,
+    }
+
+
+# --------------------------------------------------------------------------
+# decode / serving fixtures (lazy, cached: one tiny model per process)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=1)
+def decode_fixture():
+    """The smoke decode model with TAF enabled: the program the serving
+    path runs. One construction serves A001/A003/A005."""
+    from repro.launch import steps as steps_mod
+    from repro.models import build
+    from repro.qos import calibrate
+
+    cfg = calibrate.default_decode_cfg()
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt_len, batch = 4, 2
+    prompts = jnp.zeros((batch, prompt_len), jnp.int32)
+    prefill = jax.jit(steps_mod.make_prefill_step(model, 16))
+    logits, cache = prefill(params, {"tokens": prompts})
+    tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    serve = steps_mod.make_serve_step(model)
+    return {"model": model, "params": params, "cache": cache,
+            "tokens": tokens, "pos": jnp.int32(prompt_len), "serve": serve}
+
+
+def serve_knob_target() -> KnobTarget:
+    """The decode TAF threshold through the REAL serve step: writing the
+    knob into the cache and tracing must not change the program (A001)."""
+
+    def build():
+        fx = decode_fixture()
+
+        def run(th):
+            taf = dict(fx["cache"]["taf"])
+            taf["threshold"] = jnp.full_like(taf["threshold"], th)
+            cache = dict(fx["cache"], taf=taf)
+            return fx["serve"](fx["params"], cache, fx["tokens"], fx["pos"])
+
+        return run
+
+    return KnobTarget("decode.serve_step.rsd_threshold", build)
+
+
+def serve_taint_target() -> TraceTarget:
+    def build():
+        fx = decode_fixture()
+        fn = lambda params, cache, tokens, pos: fx["serve"](
+            params, cache, tokens, pos)
+        return fn, (fx["params"], fx["cache"], fx["tokens"], fx["pos"])
+
+    return TraceTarget("decode.serve_step", build,
+                       tainted=("memo_k", "memo_v", "memo_delta"))
+
+
+@functools.lru_cache(maxsize=1)
+def engine_fixture():
+    """A 1-device sharded ServingEngine over the decode fixture's model,
+    prefilled once -- the placement surface A005 audits. Mesh commitment
+    is a property of concrete arrays, so this target genuinely executes
+    (one tiny prefill)."""
+    from repro.serving.scheduler import ServingEngine
+
+    fx = decode_fixture()
+    eng = ServingEngine(fx["model"], fx["params"], slots=2, max_len=16,
+                        prompt_len=4, devices=1)
+    prompts = jnp.zeros((eng.n_slots, eng.prompt_len), jnp.int32)
+    logits, cache = eng._prefill(eng.params, {"tokens": prompts})
+    eng.cache = eng._shard_cache(cache)
+    eng.tokens = eng._place_tokens(
+        jnp.argmax(logits, axis=-1).astype(jnp.int32))
+    return eng
+
+
+def leaf_paths(tree) -> List[Tuple[str, object]]:
+    """(dotted-path, leaf) pairs for a pytree, for placement audits and
+    taint-source selection."""
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        out.append((jax.tree_util.keystr(path), leaf))
+    return out
+
+
+def tainted_positions(example_args: tuple,
+                      needles: Sequence[str]) -> List[int]:
+    """Flattened-input positions (== jaxpr invar positions) whose pytree
+    path contains any needle."""
+    leaves_with_path, _ = jax.tree_util.tree_flatten_with_path(example_args)
+    return [i for i, (path, _) in enumerate(leaves_with_path)
+            if any(n in jax.tree_util.keystr(path) for n in needles)]

@@ -1,0 +1,123 @@
+"""Abstract tracing utilities: jaxpr fingerprints and the knob-trace probe.
+
+The A001 protocol
+-----------------
+A quality knob is *properly traced* iff tracing the target as a function OF
+the knob succeeds and produces the same jaxpr for different knob values:
+
+    jax.make_jaxpr(lambda th: target(th))(jnp.float32(v))
+
+Passing the knob as the traced argument (rather than closing over a Python
+float) is load-bearing: a closed-over float becomes a literal at the pjit
+call site, so even a perfectly-traced kernel would show a textual diff.
+With the knob as the argument there are exactly three outcomes, each a
+distinct verdict:
+
+  * identical fingerprints  -> traced (clean): one compiled artifact serves
+    every knob value.
+  * tracing RAISES          -> static (finding): the knob reaches a
+    `static_argnames` parameter (Non-hashable static arguments) or Python
+    control flow (TracerBoolConversionError) -- either way each value is a
+    fresh compile or an outright trace failure.
+  * differing fingerprints  -> baked (finding): the knob value was embedded
+    in the program as a constant (e.g. captured before the trace), so
+    sweeping it recompiles.
+
+Fingerprints normalize hex object addresses (pallas_call params embed
+function objects whose reprs contain `0x...`) so two traces of the same
+program text compare equal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+_HEX_ADDR = re.compile(r"0x[0-9a-fA-F]+")
+# `let _tmp123 = ...` counters can differ across traces of *different*
+# programs but are stable within one process for identical traces; the hex
+# normalization is the only one that has shown up in practice.
+
+
+def jaxpr_fingerprint(closed_jaxpr) -> str:
+    """Comparable text form of a ClosedJaxpr: structure + consts' avals,
+    with memory addresses normalized out."""
+    text = str(closed_jaxpr)
+    consts = ",".join(str(jax.api_util.shaped_abstractify(c))
+                      if hasattr(jax.api_util, "shaped_abstractify")
+                      else str(jnp.shape(c))
+                      for c in closed_jaxpr.consts)
+    return _HEX_ADDR.sub("0x", text + "\nconsts: " + consts)
+
+
+@dataclasses.dataclass(frozen=True)
+class KnobTraceResult:
+    """Outcome of probing one knob on one target."""
+
+    verdict: str                 # "traced" | "static" | "baked" | "error"
+    knob_values: Sequence[float]
+    error: Optional[str] = None  # for static/error: the exception text
+    diff_excerpt: Optional[str] = None   # for baked: first differing region
+
+    @property
+    def clean(self) -> bool:
+        return self.verdict == "traced"
+
+
+def _first_diff(a: str, b: str, context: int = 80) -> str:
+    n = min(len(a), len(b))
+    i = next((i for i in range(n) if a[i] != b[i]), n)
+    lo = max(0, i - context)
+    return (f"...{a[lo:i + context]}... vs ...{b[lo:i + context]}...")
+
+
+_STATIC_MARKERS = (
+    "Non-hashable static arguments",
+    "static argument",
+    "TracerBoolConversionError",
+    "concrete value is expected",
+    "Abstract tracer value encountered",
+)
+
+
+def probe_knob(target: Callable[[jnp.ndarray], object],
+               knob_values: Sequence[float] = (0.25, 0.75),
+               dtype=jnp.float32) -> KnobTraceResult:
+    """Trace `target` (a function of ONE scalar knob) at each value and
+    classify. No computation runs: `jax.make_jaxpr` only traces.
+    """
+    fingerprints = []
+    for v in knob_values:
+        # a FRESH wrapper per value defeats jax's trace cache (keyed on
+        # the function object + avals): a cached jaxpr would hide a
+        # constant baked in at trace time, since the target would only
+        # ever be traced once
+        def _fresh(th, _t=target):
+            return _t(th)
+        try:
+            closed = jax.make_jaxpr(_fresh)(jnp.asarray(v, dtype))
+        except Exception as e:  # noqa: BLE001 - classify, don't crash
+            text = f"{type(e).__name__}: {e}"
+            if any(m in text for m in _STATIC_MARKERS) or \
+                    isinstance(e, (TypeError, jax.errors.TracerBoolConversionError)):
+                return KnobTraceResult(verdict="static",
+                                       knob_values=tuple(knob_values),
+                                       error=text[:500])
+            return KnobTraceResult(verdict="error",
+                                   knob_values=tuple(knob_values),
+                                   error=text[:500])
+        fingerprints.append(jaxpr_fingerprint(closed))
+    if all(f == fingerprints[0] for f in fingerprints[1:]):
+        return KnobTraceResult(verdict="traced", knob_values=tuple(knob_values))
+    return KnobTraceResult(
+        verdict="baked", knob_values=tuple(knob_values),
+        diff_excerpt=_first_diff(fingerprints[0], fingerprints[1]))
+
+
+def abstract_arrays(*shaped):
+    """ShapeDtypeStructs for tracing without allocating real data.
+    Each item is (shape, dtype)."""
+    return tuple(jax.ShapeDtypeStruct(s, d) for s, d in shaped)

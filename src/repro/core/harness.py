@@ -288,7 +288,8 @@ def _run_batched(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int,
 
 def run_specs(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int = 1,
               jobs: int = 1, *,
-              substrate: Optional[str] = None) -> List[AppResult]:
+              substrate: Optional[str] = None,
+              lint: bool = False) -> List[AppResult]:
     """Evaluate specs with best-of-`repeats` timing, dispatching to the
     app's batched runner (chunks of `jobs`) or a thread pool when jobs > 1.
     The single parallel-dispatch path shared by sweep and the autotuners.
@@ -297,8 +298,23 @@ def run_specs(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int = 1,
     for the whole evaluation (see `repro.core.substrate`): apps and
     ApproxRegions that resolve the substrate at run time are flipped onto
     the Pallas kernels; apps that pinned one at construction are unaffected.
+
+    `lint=True` runs approxlint's A001 grouping check over THESE specs
+    before anything executes (host-side only -- no tracing): specs that
+    differ only in a quality knob but would not share a compiled
+    evaluation raise ValueError instead of silently sweeping one compile
+    per grid point. See docs/analysis.md.
     """
     specs = list(specs)
+    if lint:
+        from repro.analysis.rules import check_spec_grouping
+        findings = check_spec_grouping(
+            specs, subject_prefix=f"app.{app.name or 'specs'}")
+        if findings:
+            raise ValueError(
+                "approxlint found recompile leaks in the spec population: "
+                + "; ".join(f"{f.rule} {f.subject}: {f.message}"
+                            for f in findings))
     with substrate_mod.use(substrate):
         if jobs > 1 and app.run_batch is not None:
             return _run_batched(app, specs, repeats, batch_size=jobs)

@@ -50,11 +50,21 @@ def iact_rowfn(x, w1, w2, *, block_rows=128, table_size=4, threshold=0.5,
 
 def perforated_matmul(x, w, *, block_m=128, block_n=128, block_k=128,
                       perfo: Optional[PerforationParams] = None,
-                      rescale=False, out_dtype=jnp.float32,
+                      fraction=None, rescale=False, out_dtype=jnp.float32,
                       interpret: Optional[bool] = None):
+    """`fraction` is the traced hook for ini/fini/random perforation: when
+    set, the kernel's masked mode gates K blocks from an in-trace liveness
+    vector and one compiled program serves any fraction."""
+    if fraction is not None and perfo is not None:
+        # Masked mode ignores perfo.fraction (the traced operand carries
+        # it), but perfo is a static jit arg: normalize the dead field so
+        # the natural sweep pattern -- a fresh PerforationParams per grid
+        # point -- still hits one compile.
+        perfo = dataclasses.replace(perfo, fraction=0.0)
     return _perf_matmul(x, w, block_m=block_m, block_n=block_n,
-                        block_k=block_k, perfo=perfo, rescale=rescale,
-                        out_dtype=out_dtype, interpret=_interp(interpret))
+                        block_k=block_k, perfo=perfo, fraction=fraction,
+                        rescale=rescale, out_dtype=out_dtype,
+                        interpret=_interp(interpret))
 
 
 def perforated_attention(q, k, v, *, block_q=128, block_kv=128,

@@ -6,10 +6,23 @@ are never scheduled, so -- unlike per-element (divergent) perforation, which
 on a vector machine saves nothing -- the FLOP savings are structural:
 executed_flops = kept/total * full_flops.
 
-The kept-block list arrives via TPU scalar prefetch
-(``pltpu.PrefetchScalarGridSpec``): the index maps read ``kept_ref[kk]`` so
-the DMA engine fetches exactly the kept tiles; control flow is perfectly
-uniform (no ``@pl.when`` on the hot path).
+Two perforation modes share one kernel body (the same split as
+``perforated_attention``):
+
+  * **structural** (`fraction=None`): the kept-block list is computed on the
+    host from the static `perfo` params and the grid enumerates ONLY the
+    kept blocks -- dropped blocks are never scheduled (the herded payoff).
+  * **masked** (`fraction=` a possibly-traced scalar; ini/fini/random
+    kinds): the grid enumerates ALL K blocks and a per-block liveness
+    vector -- computed in-trace from the traced fraction -- gates each
+    block's accumulation under ``@pl.when``. The compiled program is shaped
+    only by the block geometry, so a fraction sweep compiles once.
+
+The kept-block list, liveness vector, and rescale factor arrive via TPU
+scalar prefetch (``pltpu.PrefetchScalarGridSpec``): the index maps read
+``kept_ref[kk]`` so the DMA engine fetches exactly the kept tiles; in
+structural mode control flow stays perfectly uniform (liveness is all-ones,
+so the ``@pl.when`` guard is compile-time foldable on the hot path).
 """
 from __future__ import annotations
 
@@ -22,12 +35,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.perforation import kept_indices
+from repro.core.perforation import (FRACTION_KINDS, kept_indices,
+                                    traced_execute_mask)
 from repro.core.types import PerforationParams
 
 
-def _perf_matmul_kernel(kept_ref, x_ref, w_ref, o_ref, acc_ref, *,
-                        n_kept: int, rescale_factor: float):
+def _perf_matmul_kernel(kept_ref, live_ref, factor_ref, x_ref, w_ref, o_ref,
+                        acc_ref, *, n_enum: int):
     del kept_ref  # consumed by the index maps
     k = pl.program_id(2)
 
@@ -35,13 +49,15 @@ def _perf_matmul_kernel(kept_ref, x_ref, w_ref, o_ref, acc_ref, *,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
-                            w_ref[...].astype(jnp.float32),
-                            preferred_element_type=jnp.float32)
+    @pl.when(live_ref[k] > 0)
+    def _accum():
+        acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                                w_ref[...].astype(jnp.float32),
+                                preferred_element_type=jnp.float32)
 
-    @pl.when(k == n_kept - 1)
+    @pl.when(k == n_enum - 1)
     def _fini():
-        o_ref[...] = (acc_ref[...] * rescale_factor).astype(o_ref.dtype)
+        o_ref[...] = (acc_ref[...] * factor_ref[0]).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=(
@@ -50,33 +66,57 @@ def _perf_matmul_kernel(kept_ref, x_ref, w_ref, o_ref, acc_ref, *,
 def perforated_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
                       block_n: int = 128, block_k: int = 128,
                       perfo: Optional[PerforationParams] = None,
+                      fraction=None,
                       rescale: bool = False, out_dtype=jnp.float32,
                       interpret: bool = False) -> jnp.ndarray:
-    """Y ~= X @ W computing only the kept K-blocks (herded perforation)."""
+    """Y ~= X @ W computing only the kept K-blocks (herded perforation).
+
+    `fraction` is the traced-parameter hook: a (possibly traced) scalar
+    overriding ``perfo.fraction`` for the fraction-driven kinds
+    (ini/fini/random). When set, the kernel runs in MASKED mode -- the grid
+    enumerates every K block and a liveness vector computed in-trace gates
+    the dropped ones -- so the same compiled program serves any fraction.
+    """
     m, k = x.shape
     k2, n = w.shape
     assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
     nk = k // block_k
-    kept = np.arange(nk) if perfo is None else kept_indices(nk, perfo)
-    if len(kept) == 0:
-        raise ValueError("perforation dropped every K block")
-    kept_arr = jnp.asarray(kept, jnp.int32)
-    n_kept = len(kept)
-    factor = (nk / n_kept) if rescale else 1.0
+    if fraction is not None:
+        if perfo is None or perfo.kind not in FRACTION_KINDS:
+            raise ValueError(
+                "fraction is a traced hook for ini/fini/random perforation; "
+                f"got perfo={perfo}")
+        # Masked mode: enumerate every K block; liveness is data.
+        kept_arr = jnp.arange(nk, dtype=jnp.int32)
+        live_arr = traced_execute_mask(nk, perfo, fraction).astype(jnp.int32)
+        n_enum = nk
+        n_live = jnp.maximum(jnp.sum(live_arr), 1).astype(jnp.float32)
+        factor = (nk / n_live) if rescale else jnp.float32(1.0)
+    else:
+        kept = np.arange(nk) if perfo is None else kept_indices(nk, perfo)
+        if len(kept) == 0:
+            raise ValueError("perforation dropped every K block")
+        kept_arr = jnp.asarray(kept, jnp.int32)
+        live_arr = jnp.ones((len(kept),), jnp.int32)
+        n_enum = len(kept)
+        factor = (nk / n_enum) if rescale else 1.0
+    factor_arr = jnp.asarray(factor, jnp.float32).reshape((1,))
 
-    kernel = functools.partial(_perf_matmul_kernel, n_kept=n_kept,
-                               rescale_factor=factor)
+    kernel = functools.partial(_perf_matmul_kernel, n_enum=n_enum)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=1,
-        grid=(m // block_m, n // block_n, n_kept),
+        num_scalar_prefetch=3,
+        grid=(m // block_m, n // block_n, n_enum),
         in_specs=[
             pl.BlockSpec((block_m, block_k),
-                         lambda i, j, kk, kept_ref: (i, kept_ref[kk])),
+                         lambda i, j, kk, kept_ref, live_ref, factor_ref:
+                         (i, kept_ref[kk])),
             pl.BlockSpec((block_k, block_n),
-                         lambda i, j, kk, kept_ref: (kept_ref[kk], j)),
+                         lambda i, j, kk, kept_ref, live_ref, factor_ref:
+                         (kept_ref[kk], j)),
         ],
         out_specs=pl.BlockSpec((block_m, block_n),
-                               lambda i, j, kk, kept_ref: (i, j)),
+                               lambda i, j, kk, kept_ref, live_ref, factor_ref:
+                               (i, j)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
     )
     return pl.pallas_call(
@@ -84,4 +124,4 @@ def perforated_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         interpret=interpret,
-    )(kept_arr, x, w)
+    )(kept_arr, live_arr, factor_arr, x, w)

@@ -120,7 +120,7 @@ class ServingEngine:
     def __init__(self, model: Model, params, *, slots: int = 4,
                  max_len: int = 256, prompt_len: int = 32, qos=None,
                  mesh=None, devices: Optional[int] = None,
-                 shards: Optional[int] = None):
+                 shards: Optional[int] = None, lint: bool = False):
         self.model = model
         self.params = params
         self.n_slots = slots
@@ -183,7 +183,7 @@ class ServingEngine:
         else:
             self._serve = jax.jit(steps_mod.make_serve_step(model))
         self.cache = None
-        self.tokens = jnp.zeros((slots,), jnp.int32)
+        self.tokens = self._place_tokens(jnp.zeros((slots,), jnp.int32))
         self.qos = qos
         self._knob = None                    # last actuated threshold(s)
         # (tick, threshold) per actuation -- the engine-level knob
@@ -220,6 +220,26 @@ class ServingEngine:
             else:
                 self._serve_exact = jax.jit(
                     steps_mod.make_serve_step(exact_model))
+        if lint:
+            # opt-in approxlint pass over what this engine will actually
+            # serve: the policy ladder (A004, raw entries, cross-checked
+            # against THIS model's structural TAF params) and the mesh
+            # commitment of every leaf already placed (A005 -- the params;
+            # the cache is audited too once prefilled, but the params are
+            # where the PR 6 per-tick re-shard regression lived)
+            from repro.analysis import rules as lint_rules
+            findings = []
+            if qos is not None:
+                t = model.cfg.approx_decode.taf
+                findings += lint_rules.check_policy_document(
+                    qos.policy.to_json(), subject="engine.policy",
+                    model_taf=(t.history_size, t.prediction_size))
+            findings += lint_rules.check_engine_placement(self)
+            if findings:
+                raise ValueError(
+                    "approxlint found serving misconfigurations: "
+                    + "; ".join(f"{f.rule} {f.subject}: {f.message}"
+                                for f in findings))
 
     @property
     def sharded(self) -> bool:

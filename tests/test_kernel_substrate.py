@@ -26,6 +26,7 @@ from repro.kernels.iact_memo import iact_rowfn as _iact_jit
 from repro.kernels.taf_matmul import taf_matmul as _taf_jit
 from repro.kernels.perforated_attention import (perforated_attention as
                                                 _attn_jit)
+from repro.kernels.perforated_matmul import perforated_matmul as _pmm_jit
 
 sys.path.insert(0, os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "examples"))
@@ -170,6 +171,72 @@ class TestMaskedAttention:
         with pytest.raises(ValueError, match="traced hook"):
             ops.perforated_attention(q, q, q, block_q=32, block_kv=32,
                                      perfo=p, fraction=0.5)
+
+
+# -------------------------------------------------- masked matmul parity
+
+
+class TestMaskedMatmul:
+    @pytest.mark.parametrize("kind,fr", [
+        (PerforationKind.INI, 0.25), (PerforationKind.INI, 0.5),
+        (PerforationKind.FINI, 0.25), (PerforationKind.RANDOM, 0.5),
+    ])
+    def test_traced_fraction_matches_structural(self, kind, fr):
+        rng = np.random.RandomState(7)
+        x = jnp.asarray(rng.randn(64, 256).astype(np.float32))
+        w = jnp.asarray(rng.randn(256, 64).astype(np.float32))
+        p = PerforationParams(kind=kind, fraction=fr)
+        y_struct = ops.perforated_matmul(x, w, block_m=32, block_n=32,
+                                         block_k=32, perfo=p)
+        y_masked = ops.perforated_matmul(x, w, block_m=32, block_n=32,
+                                         block_k=32, perfo=p, fraction=fr)
+        np.testing.assert_allclose(np.asarray(y_masked),
+                                   np.asarray(y_struct), atol=1e-3)
+
+    def test_traced_fraction_matches_ref_with_rescale(self):
+        rng = np.random.RandomState(8)
+        x = jnp.asarray(rng.randn(32, 128).astype(np.float32))
+        w = jnp.asarray(rng.randn(128, 32).astype(np.float32))
+        for fr in (0.0, 0.25, 0.5, 0.75):
+            p = PerforationParams(kind=PerforationKind.INI,
+                                  fraction=fr if fr else 0.1)
+            y = ops.perforated_matmul(x, w, block_m=32, block_n=32,
+                                      block_k=32, perfo=p, rescale=True,
+                                      fraction=fr)
+            pr = PerforationParams(kind=PerforationKind.INI, fraction=fr)
+            yr = ref.perforated_matmul_ref(x, w, block_k=32, perfo=pr,
+                                           rescale=True)
+            np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                                       rtol=1e-4, atol=1e-3)
+
+    def test_matmul_fraction_grid_single_trace(self):
+        """A fresh PerforationParams per grid point must still hit one
+        compile in masked mode: the traced fraction operand carries the
+        knob and the dead perfo.fraction field is normalized out of the
+        static jit key."""
+        rng = np.random.RandomState(9)
+        x = jnp.asarray(rng.randn(32, 128).astype(np.float32))
+        w = jnp.asarray(rng.randn(128, 32).astype(np.float32))
+        ops.perforated_matmul(
+            x, w, block_m=32, block_n=32, block_k=32,
+            perfo=PerforationParams(kind=PerforationKind.INI, fraction=0.5),
+            fraction=0.25)
+        base = _pmm_jit._cache_size()
+        for fr in np.linspace(0.0, 0.9, 16):
+            p = PerforationParams(kind=PerforationKind.INI,
+                                  fraction=float(fr) if fr else 0.1)
+            ops.perforated_matmul(x, w, block_m=32, block_n=32, block_k=32,
+                                  perfo=p, fraction=float(fr))
+        assert _pmm_jit._cache_size() - base == 0
+
+    def test_fraction_hook_needs_fraction_kind(self):
+        rng = np.random.RandomState(10)
+        x = jnp.asarray(rng.randn(32, 64).astype(np.float32))
+        w = jnp.asarray(rng.randn(64, 32).astype(np.float32))
+        p = PerforationParams(kind=PerforationKind.SMALL, skip=2)
+        with pytest.raises(ValueError, match="traced hook"):
+            ops.perforated_matmul(x, w, block_m=32, block_n=32, block_k=32,
+                                  perfo=p, fraction=0.5)
 
 
 # -------------------------------------------- ApproxRegion substrate plumb
