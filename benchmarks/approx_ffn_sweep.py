@@ -17,6 +17,16 @@ With `artifacts_dir`, writes ``BENCH_ffn.json`` (structural sweep numbers:
 record/front counts, hypervolume, best-under-bound rows, parity bits) --
 the committed copy under ``benchmarks/baselines/`` is a regression
 baseline for ``benchmarks.run --check-regression``.
+
+With ``predict=True`` (``benchmarks.run --only ffn --predict``) the sweep
+runs in cost-model pruned mode instead: `benchmarks.costmodel.ffn_model`
+ranks the full grid by predicted front regret, only the band within the
+regret budget -- capped at ``len(grid) // 5`` specs -- is measured, and
+the report compares the pruned front's hypervolume against the committed
+full-grid baseline (recovery must be >= `costmodel.FRONT_TOLERANCE`).
+Artifacts go to ``BENCH_ffn_predict.json``; the full-grid
+``BENCH_ffn.json`` baseline (which pins ``n_records`` exactly) is never
+overwritten by a pruned run.
 """
 from __future__ import annotations
 
@@ -45,9 +55,63 @@ def _grid():
     return taf + iact + perfo
 
 
+def _predict_main(report, jobs: int, db_path: Optional[str],
+                  substrate: Optional[str],
+                  artifacts_dir: Optional[str]) -> None:
+    """Cost-model pruned sweep: measure only the predicted front band
+    (<= 1/5 of the grid) and report recovery vs the committed baseline."""
+    from . import costmodel
+
+    app = approx_ffn.make_app(substrate=substrate)
+    grid = _grid()
+    budget = max(1, len(grid) // 5)
+    model = costmodel.ffn_model()
+    band = model.select_band(grid, budget=budget)
+    recs = sweep(app, band, repeats=1, db_path=db_path, jobs=max(jobs, 1))
+    fs = pareto.front_summary(recs, use_modeled=True)
+
+    base_path = os.path.join(os.path.dirname(__file__), "baselines",
+                             "BENCH_ffn.json")
+    base_hv = None
+    if os.path.exists(base_path):
+        with open(base_path) as f:
+            base_hv = json.load(f)["front"]["hypervolume"]
+    ratio = (fs["hypervolume"] / base_hv) if base_hv else None
+    recovered = ratio is not None and ratio >= costmodel.FRONT_TOLERANCE
+    report("approx_ffn_predict_band", f"{len(band)}",
+           f"budget={budget},grid={len(grid)}")
+    report("approx_ffn_predict_front", f"{len(recs)}",
+           f"n_front={fs['n_front']},hv={fs['hypervolume']:.3f},"
+           f"recovery={'n/a' if ratio is None else f'{ratio:.3f}'},"
+           f"tol={costmodel.FRONT_TOLERANCE}")
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        path = os.path.join(artifacts_dir, "BENCH_ffn_predict.json")
+        with open(path, "w") as f:
+            json.dump({
+                "substrate": app.workload["substrate"],
+                "n_grid": len(grid),
+                "band_budget": budget,
+                "n_records": len(recs),
+                "front": fs,
+                "front_recovery": {
+                    "hv_band": fs["hypervolume"],
+                    "hv_baseline": base_hv,
+                    "ratio": ratio,
+                    "tolerance": costmodel.FRONT_TOLERANCE,
+                    "recovered": recovered,
+                },
+            }, f, indent=1)
+        report("ffn_predict_json", "0", path)
+
+
 def main(report, jobs: int = 1, db_path: Optional[str] = None,
          substrate: Optional[str] = "pallas",
-         artifacts_dir: Optional[str] = None) -> None:
+         artifacts_dir: Optional[str] = None,
+         predict: bool = False) -> None:
+    if predict:
+        _predict_main(report, jobs, db_path, substrate, artifacts_dir)
+        return
     app = approx_ffn.make_app(substrate=substrate)
     grid = _grid()
     recs = sweep(app, grid, repeats=1, db_path=db_path, jobs=max(jobs, 1))

@@ -1,0 +1,295 @@
+"""approxcost validation: predicted-vs-measured on the example apps + ffn.
+
+Two claims get checked, statically-predicted numbers against the same
+measured `Record` stream every other benchmark consumes:
+
+1. **Ranking.** Per app, the analytical predictor
+   (`repro.analysis.cost.AppCostModel`, region costs traced with
+   `trace_cost` -- no hand-counted FLOPs) must rank a TAF threshold grid
+   the same way the measured structural speedups
+   (`Record.modeled_speedup`) do: Spearman rank correlation, reported
+   per app and pinned by the regression gate.
+
+2. **Pruned front recovery.** For the ffn app, the predictor's
+   `select_band` picks ``len(grid) // 5`` specs out of the full
+   30-spec sweep grid; only those are measured, and the measured band's
+   Pareto hypervolume must recover the committed full-grid front
+   (``benchmarks/baselines/BENCH_ffn.json``) within
+   ``FRONT_TOLERANCE`` -- the ISSUE's "same front at an order of
+   magnitude fewer measured points" statistic, here at the 1/5 budget
+   the acceptance bar sets.
+
+Writes ``BENCH_costmodel.json`` (kept/dropped counts exact, Spearman
+and hypervolume-recovery close) for ``benchmarks.run
+--check-regression``.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+from typing import Dict, Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.analysis.cost import AppCostModel, CostVector, Site, trace_cost
+from repro.analysis.machine import get_machine
+from repro.core import pareto
+from repro.core.harness import sweep, taf_grid
+from repro.core.types import Level, Technique
+
+# Documented tolerance for the ffn front-recovery acceptance criterion:
+# the measured band's hypervolume must reach this fraction of the
+# committed full-grid front's hypervolume.
+FRONT_TOLERANCE = 0.90
+
+# Small-but-representative validation workloads: the predictor only
+# consumes structure (traced region cost, invocation counts), so scaled-
+# down shapes validate the same model the full-size sweeps would use.
+# blackscholes runs the regime-switching walk (volatility > 1, as in
+# fig10c) so the RSD activation genuinely discriminates across the grid.
+_WORKLOADS = {
+    "blackscholes": dict(n_elements=128, steps=32, volatility=2.0),
+    "binomial_options": dict(n_elements=32, steps=16, tree_steps=64),
+    "kmeans": dict(n=256, d=4, k=4, max_iters=10),
+    "lavamd": dict(nx=3),
+    "minife_cg": dict(n=32, iters=20),
+}
+
+# Per-app TAF threshold grids, chosen inside each workload's RSD
+# activation range (outside it every threshold saturates the duty cycle
+# and the measured speedups tie -- nothing left to rank).
+_THRESHOLDS = {
+    "blackscholes": (0.005, 0.05, 0.2, 1.0),
+    "binomial_options": (0.0002, 0.001, 0.005, 0.02),
+    "kmeans": (0.05, 0.2, 0.5, 1.0),
+    "lavamd": (0.05, 0.2, 0.5, 1.0),
+    "minife_cg": (0.05, 0.2, 0.5, 1.0),
+}
+
+
+# --------------------------------------------------------------------------
+# per-app cost models (region costs TRACED, not hand-counted)
+# --------------------------------------------------------------------------
+
+def blackscholes_model(n_elements: int = 128, steps: int = 32,
+                       volatility: float = 1.0,
+                       machine=None) -> AppCostModel:
+    """One TAF/iACT decision per sequence step over the bs_price region.
+    `volatility` shapes the data, not the program -- it is accepted so the
+    builder mirrors `make_app`'s workload signature. Option prices cross
+    zero (deep out-of-the-money calls), so the QoI's relative error is
+    heavy-tailed: `qoi_condition` floors the residual accordingly."""
+    from apps import blackscholes
+    region = trace_cost(blackscholes.bs_price,
+                        jnp.ones((n_elements, 5), jnp.float32))
+    site = Site(region=region, invocations=float(steps), in_dim=5,
+                qoi_condition=0.05)
+    return AppCostModel(
+        name="blackscholes", total=region * float(steps),
+        sites={Technique.TAF: site, Technique.IACT: site},
+        machine=get_machine(machine), dispatches=1.0)
+
+
+def binomial_options_model(n_elements: int = 32, steps: int = 16,
+                           tree_steps: int = 64,
+                           machine=None) -> AppCostModel:
+    from apps import binomial_options
+    region = trace_cost(
+        lambda x: binomial_options.binomial_price(x, tree_steps),
+        jnp.ones((n_elements, 5), jnp.float32))
+    site = Site(region=region, invocations=float(steps), in_dim=5)
+    return AppCostModel(
+        name="binomial_options", total=region * float(steps),
+        sites={Technique.TAF: site, Technique.IACT: site},
+        machine=get_machine(machine), dispatches=1.0)
+
+
+def kmeans_model(n: int = 256, d: int = 4, k: int = 4,
+                 max_iters: int = 10, machine=None) -> AppCostModel:
+    """The assignment kernel is the approximable region, once per
+    Lloyd iteration."""
+    from apps import kmeans
+    region = trace_cost(kmeans._assign_exact,
+                        jnp.ones((n, d), jnp.float32),
+                        jnp.ones((k, d), jnp.float32))
+    site = Site(region=region, invocations=float(max_iters), in_dim=d)
+    return AppCostModel(
+        name="kmeans", total=region * float(max_iters),
+        sites={Technique.TAF: site, Technique.IACT: site},
+        machine=get_machine(machine), dispatches=float(max_iters))
+
+
+def lavamd_model(nx: int = 3, seed: int = 0, machine=None) -> AppCostModel:
+    """27 neighbor-box force invocations; one decision each."""
+    from apps import lavamd
+    region_fn, xs, _nb = lavamd._region_setup(nx, seed)
+    region = trace_cost(region_fn, jnp.asarray(xs[0]))
+    site = Site(region=region, invocations=27.0,
+                in_dim=int(np.asarray(xs).shape[-1]))
+    return AppCostModel(
+        name="lavamd", total=region * 27.0,
+        sites={Technique.TAF: site, Technique.IACT: site},
+        machine=get_machine(machine), dispatches=1.0)
+
+
+def minife_cg_model(n: int = 32, iters: int = 20,
+                    machine=None) -> AppCostModel:
+    """The stencil matvec dominates each CG iteration. Errors injected in
+    one iteration feed every later one through the residual recurrence
+    (the paper's MiniFE pathology), so the site amplification is the
+    iteration count -- linear accumulation, not a random walk, because CG
+    updates are NOT independently signed."""
+    from apps import minife_cg
+    region = trace_cost(minife_cg.poisson_matvec,
+                        jnp.ones((n, n), jnp.float32))
+    site = Site(region=region, invocations=float(iters), in_dim=n,
+                n_iters=iters, amplification=float(iters))
+    return AppCostModel(
+        name="minife_cg", total=region * float(iters),
+        sites={Technique.TAF: site, Technique.PERFORATION: site},
+        machine=get_machine(machine), dispatches=float(iters))
+
+
+def ffn_model(seq: int = 128, d: int = 32, d_h: int = 64,
+              machine=None) -> AppCostModel:
+    """Three sites, one per technique, mirroring `approx_ffn`'s
+    `_flop_fraction` accounting: TAF gates the projection row blocks,
+    iACT memoizes the FFN row blocks, perforation drops attention KV
+    blocks."""
+    from apps import approx_ffn
+    proj, attn, ffn = approx_ffn._flops(seq, d, d_h)
+    total = CostVector(proj + attn + ffn,
+                       4.0 * (seq * d * 4 + d * d + 2 * d * d_h))
+    n_rows = float(seq // approx_ffn._BLOCK_M)
+    n_kv = seq // approx_ffn._BLOCK_ATTN
+    sites = {
+        Technique.TAF: Site(region=CostVector(proj / n_rows,
+                                              4.0 * seq * d / n_rows),
+                            invocations=n_rows, in_dim=d),
+        Technique.IACT: Site(region=CostVector(ffn / n_rows,
+                                               4.0 * seq * d / n_rows),
+                             invocations=n_rows, in_dim=d),
+        Technique.PERFORATION: Site(region=CostVector(attn, 4.0 * seq * d),
+                                    invocations=1.0, n_iters=n_kv),
+    }
+    return AppCostModel(name="approx_ffn", total=total, sites=sites,
+                        machine=get_machine(machine), dispatches=3.0)
+
+
+MODEL_BUILDERS = {
+    "blackscholes": blackscholes_model,
+    "binomial_options": binomial_options_model,
+    "kmeans": kmeans_model,
+    "lavamd": lavamd_model,
+    "minife_cg": minife_cg_model,
+}
+
+
+def _make_app(name: str):
+    import importlib
+    mod = importlib.import_module(f"apps.{name}")
+    return mod.make_app(**_WORKLOADS[name])
+
+
+def spearman(xs, ys) -> float:
+    """Spearman rank correlation (average ranks for ties; no scipy)."""
+    def _ranks(v):
+        v = np.asarray(v, np.float64)
+        order = np.argsort(v, kind="mergesort")
+        ranks = np.empty_like(v)
+        ranks[order] = np.arange(len(v), dtype=np.float64)
+        for val in np.unique(v):
+            m = v == val
+            ranks[m] = ranks[m].mean()
+        return ranks
+    rx, ry = _ranks(xs), _ranks(ys)
+    rx -= rx.mean()
+    ry -= ry.mean()
+    denom = math.sqrt(float((rx * rx).sum()) * float((ry * ry).sum()))
+    if denom == 0.0:
+        return 1.0 if np.allclose(rx, ry) else 0.0
+    return float((rx * ry).sum() / denom)
+
+
+def _validation_grid(name: str):
+    """The per-app grid: one structural TAF group over four thresholds
+    (every example app accepts TAF; rank correlation is within-technique,
+    matching the predictor's contract)."""
+    return taf_grid(h_sizes=(2,), p_sizes=(4,),
+                    thresholds=_THRESHOLDS[name],
+                    levels=(Level.ELEMENT,))
+
+
+def main(report, jobs: int = 1, db_path: Optional[str] = None,
+         artifacts_dir: Optional[str] = None) -> None:
+    doc: Dict = {"apps": {}, "front_tolerance": FRONT_TOLERANCE}
+
+    for name, builder in MODEL_BUILDERS.items():
+        app = _make_app(name)
+        model = builder(**{**_WORKLOADS[name]})
+        grid = _validation_grid(name)
+        kept, dropped = model.select(grid)
+        recs = sweep(app, kept, repeats=1, db_path=db_path,
+                     jobs=max(jobs, 1))
+        preds = [model.predict(_spec_of(r)) for r in recs]
+        rho = spearman([p.speedup for p in preds],
+                       [r.modeled_speedup for r in recs])
+        bound_ok = None
+        if app.error_metric == "mape" and name != "minife_cg":
+            bound_ok = all(p.error_bound >= r.error
+                           for p, r in zip(preds, recs))
+        doc["apps"][name] = {
+            "n_grid": len(grid), "kept": len(kept), "dropped": len(dropped),
+            "spearman": rho, "bound_holds": bound_ok,
+        }
+        report(f"costmodel_{name}", f"{len(recs)}",
+               f"spearman={rho:.3f},kept={len(kept)}/{len(grid)},"
+               f"bound_holds={bound_ok}")
+
+    # -- ffn: predicted-band front recovery vs the committed full front --
+    from apps import approx_ffn
+    from benchmarks import approx_ffn_sweep
+
+    grid = approx_ffn_sweep._grid()
+    model = ffn_model()
+    budget = len(grid) // 5
+    kept, dropped = model.select(grid)
+    band = model.select_band(grid, budget=budget)
+    app = approx_ffn.make_app(substrate="pallas")
+    recs = sweep(app, band, repeats=1, db_path=db_path, jobs=max(jobs, 1))
+    fs = pareto.front_summary(recs, use_modeled=True)
+
+    base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baselines", "BENCH_ffn.json")
+    with open(base_path) as f:
+        base_hv = json.load(f)["front"]["hypervolume"]
+    ratio = fs["hypervolume"] / base_hv if base_hv else 0.0
+
+    rho_ffn = spearman(
+        [model.predict(_spec_of(r)).speedup for r in recs],
+        [r.modeled_speedup for r in recs])
+    doc["ffn"] = {
+        "n_grid": len(grid), "kept": len(kept), "dropped": len(dropped),
+        "band_budget": budget, "band_measured": len(recs),
+        "spearman": rho_ffn,
+        "front_recovery": {"hv_band": fs["hypervolume"],
+                           "hv_baseline": base_hv, "ratio": ratio},
+        "recovered": bool(ratio >= FRONT_TOLERANCE),
+    }
+    report("costmodel_ffn", f"{len(recs)}",
+           f"band={len(recs)}/{len(grid)},hv_ratio={ratio:.3f},"
+           f"spearman={rho_ffn:.3f},recovered={ratio >= FRONT_TOLERANCE}")
+
+    if artifacts_dir:
+        os.makedirs(artifacts_dir, exist_ok=True)
+        path = os.path.join(artifacts_dir, "BENCH_costmodel.json")
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        report("costmodel_json", "0", path)
+
+
+def _spec_of(rec):
+    from repro.core.harness import spec_from_dict
+    return spec_from_dict(rec.spec)

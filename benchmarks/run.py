@@ -16,7 +16,13 @@ the per-module table (`ffn` dispatches through `repro.core.substrate`,
 never silently measure the wrong path. ``--artifacts`` names a directory for machine-readable
 outputs (kernel_micro writes its structural numbers there as JSON;
 qos_serving writes ``BENCH_qos.json``; approx_ffn_sweep writes
-``BENCH_ffn.json``).
+``BENCH_ffn.json``; costmodel validates the analytical predictor against
+measured sweeps and writes ``BENCH_costmodel.json``).
+``--predict`` switches predict-aware modules (currently `ffn`) into
+cost-model pruned mode: only the predicted Pareto-front band of the grid
+(<= 1/5 of it) is measured, and the module reports how much of the
+committed full-grid front the pruned sweep recovers (writes
+``BENCH_ffn_predict.json``, never the full-grid baseline artifact).
 ``--devices`` runs device-aware modules (currently `qos`) with the decode
 data plane sharded over that many devices (pair with
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` on a 1-GPU/CPU
@@ -43,10 +49,11 @@ import time
 
 sys.path.insert(0, "examples")
 
-from . import (approx_ffn_sweep, fig3_table_memory, fig6_best_speedup,
-               fig7_cg_sweep, fig8c_items_per_thread, fig10c_rsd_behavior,
-               fig11c_hierarchy, fig12c_kmeans_convergence, kernel_micro,
-               lint, pareto_refine, qos_serving, roofline_table)
+from . import (approx_ffn_sweep, costmodel, fig3_table_memory,
+               fig6_best_speedup, fig7_cg_sweep, fig8c_items_per_thread,
+               fig10c_rsd_behavior, fig11c_hierarchy,
+               fig12c_kmeans_convergence, kernel_micro, lint, pareto_refine,
+               qos_serving, roofline_table)
 
 MODULES = {
     "fig3": fig3_table_memory,
@@ -62,6 +69,7 @@ MODULES = {
     "pareto": pareto_refine,
     "qos": qos_serving,
     "roofline": roofline_table,
+    "costmodel": costmodel,
 }
 
 
@@ -116,6 +124,21 @@ _BASELINE_CHECKS = {
         "close": (),
         "atleast": (),
     },
+    # the analytical predictor's validation: kept/dropped grid counts are
+    # structural (exact); rank correlations and the pruned-sweep front
+    # recovery are deterministic up to float rounding (close).
+    "BENCH_costmodel.json": {
+        "exact": ("apps.blackscholes.kept", "apps.blackscholes.bound_holds",
+                  "apps.binomial_options.bound_holds",
+                  "apps.lavamd.bound_holds",
+                  "ffn.n_grid", "ffn.kept", "ffn.dropped",
+                  "ffn.band_budget", "ffn.band_measured", "ffn.recovered"),
+        "close": ("apps.blackscholes.spearman",
+                  "apps.binomial_options.spearman", "apps.kmeans.spearman",
+                  "apps.lavamd.spearman", "apps.minife_cg.spearman",
+                  "ffn.spearman", "ffn.front_recovery.ratio"),
+        "atleast": (),
+    },
 }
 
 
@@ -132,7 +155,10 @@ def check_regression(artifacts_dir: str, baseline: str, *,
                      noise: float = 0.8, rtol: float = 0.25,
                      atol: float = 0.05) -> list:
     """Compare this run's artifacts against committed baselines. Returns a
-    list of human-readable failure strings (empty = gate passed). Every
+    list of human-readable failure strings (empty = gate passed), ALWAYS
+    covering every baseline file: an unreadable/corrupt artifact becomes a
+    failure entry for that module and the scan continues, so one broken
+    artifact cannot mask regressions in the modules after it. Every
     baseline file must have a fresh counterpart: a module silently dropped
     from the benchmark run is itself a regression."""
     if os.path.isdir(baseline):
@@ -155,15 +181,25 @@ def check_regression(artifacts_dir: str, baseline: str, *,
             failures.append(f"{name}: baseline committed but no fresh "
                             f"artifact in {artifacts_dir} (module not run?)")
             continue
-        with open(bf) as f:
-            base = json.load(f)
-        with open(af) as f:
-            new = json.load(f)
-        for key in rules["exact"]:
+        try:
+            with open(bf) as f:
+                base = json.load(f)
+        except (OSError, ValueError) as e:
+            failures.append(f"{name}: baseline unreadable "
+                            f"({type(e).__name__}: {e})")
+            continue
+        try:
+            with open(af) as f:
+                new = json.load(f)
+        except (OSError, ValueError) as e:
+            failures.append(f"{name}: fresh artifact unreadable "
+                            f"({type(e).__name__}: {e})")
+            continue
+        for key in rules.get("exact", ()):
             b, n = _lookup(base, key), _lookup(new, key)
             if b != n:
                 failures.append(f"{name}:{key}: expected {b!r}, got {n!r}")
-        for key in rules["close"]:
+        for key in rules.get("close", ()):
             b, n = _lookup(base, key), _lookup(new, key)
             if not isinstance(n, (int, float)) or not isinstance(
                     b, (int, float)):
@@ -173,7 +209,7 @@ def check_regression(artifacts_dir: str, baseline: str, *,
                 failures.append(
                     f"{name}:{key}: {n:.6g} vs baseline {b:.6g} "
                     f"(tolerance atol={atol} rtol={rtol})")
-        for key in rules["atleast"]:
+        for key in rules.get("atleast", ()):
             b, n = _lookup(base, key), _lookup(new, key)
             if not isinstance(n, (int, float)) or not isinstance(
                     b, (int, float)):
@@ -207,6 +243,10 @@ def main() -> None:
     ap.add_argument("--noise", type=float, default=0.8,
                     help="throughput noise margin for --check-regression "
                     "(fail below (1-noise)*baseline; default 0.8)")
+    ap.add_argument("--predict", action="store_true",
+                    help="cost-model pruned mode for predict-aware modules "
+                    "(ffn: measure only the predicted front band, <= 1/5 of "
+                    "the grid, and report recovery vs the committed front)")
     args = ap.parse_args()
     if args.check_regression and not args.artifacts:
         ap.error("--check-regression needs --artifacts (the gate compares "
@@ -245,7 +285,8 @@ def main() -> None:
         kw = {k: v for k, v in (("jobs", args.jobs), ("db_path", args.db),
                                 ("substrate", args.substrate),
                                 ("artifacts_dir", args.artifacts),
-                                ("devices", args.devices))
+                                ("devices", args.devices),
+                                ("predict", True if args.predict else None))
               if k in accepted and v is not None}
         t0 = time.time()
         try:

@@ -9,14 +9,21 @@ GPU runs them; this package is that stage for the JAX substrate. Rules:
   A003  unsafe approximation sink (taint into control flow / indices)
   A004  QoS ladder validity (saved policy files)
   A005  sharding placement (uncommitted leaves into the sharded step)
+  A006  ladder rung with predicted sub-1x speedup on the target machine
+  A007  approximation error amplifying unboundedly through a loop carry
 
 CLI: ``python -m repro.analysis.lint --apps all`` (docs/analysis.md).
 Programmatic: `run_lint`; opt-in hooks: `harness.run_specs(lint=True)`,
 `ServingEngine(..., lint=True)`.
+
+The package also houses the analytical cost/error predictor the rules
+lean on: `repro.analysis.machine` (named machine profiles),
+`repro.analysis.cost` (FLOP/byte counting + speedup prediction), and
+`repro.analysis.errorprop` (relative-error abstract interpretation).
 """
 from .findings import Allowlist, Finding, Report, Severity  # noqa: F401
 
-RULE_IDS = ("A001", "A002", "A003", "A004", "A005")
+RULE_IDS = ("A001", "A002", "A003", "A004", "A005", "A006", "A007")
 
 
 def __getattr__(name):
@@ -27,7 +34,8 @@ def __getattr__(name):
     if name == "run_lint":
         from .lint import run_lint
         return run_lint
-    if name in ("check_engine_placement", "check_policy_file"):
+    if name in ("check_engine_placement", "check_policy_file",
+                "check_policy_cost", "check_divergence"):
         from . import rules
         return getattr(rules, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

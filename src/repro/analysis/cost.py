@@ -1,0 +1,531 @@
+"""approxcost: a jaxpr-level analytical speedup / error predictor.
+
+HPAC-Offload's central observation is that approximation pays off only
+when the *skipped* work is the *bottleneck* work: perforation removes
+whole Pallas blocks (real FLOPs), while an oversized iACT table can cost
+more in probe distance computations than the region it memoizes.  That
+is a cost-model question, and this module answers it statically -- no
+execution -- by walking jaxprs:
+
+* ``jaxpr_cost`` / ``trace_cost`` count FLOPs and bytes per equation
+  (dot_general contraction math, transcendental polynomial weight,
+  scan bodies multiplied by trip count), the same accounting the
+  roofline analyzer applies to whole models, here applied to a region.
+* ``AppCostModel.predict`` maps an ``ApproxSpec`` to a
+  ``CostPrediction``: estimated speedup -- composed through the shared
+  machine table (`repro.analysis.machine`) as roofline terms over the
+  FLOP/byte *delta* between the precise and approximated programs plus
+  each technique's bookkeeping overhead -- and a conservative relative
+  error bound, the per-site residual scaled by the predicted activation
+  fraction and amplified through the jaxpr by
+  `repro.analysis.errorprop`'s abstract interpretation.
+* ``filter_specs`` / ``select_band`` turn predictions into sweep
+  pruning (``harness.sweep(predict=)``, ``autotune``) and
+  measurement-budget seeding (``pareto.refine(predict=)``).
+
+The skip-fraction models (what fraction of decision invocations the
+technique approximates, before any input is seen):
+
+  TAF    f = p_act * duty * warmup
+           p_act  = thresh / (thresh + rsd_scale)   -- how often the RSD
+                    test passes, against the site's typical signal RSD
+           duty   = pSize / (pSize + 1)             -- each detect buys
+                    pSize approximated invocations
+           warmup = max(0, 1 - hSize / invocations) -- window fill time
+  iACT   f = thresh / (thresh + dist_scale)         -- table-hit rate
+                    against the site's typical input spread
+  perfo  f = drop_fraction(n_iters, params)         -- exact, structural
+
+and the per-decision overheads that make sub-1x predictions real
+(rule A006's signal):
+
+  TAF    ~ (3*hSize + 8) FLOPs   -- RSD window update + stability test
+  iACT   ~ tSize * 3 * in_dim    -- distance probe against every entry
+  perfo    0                     -- bounds change at trace time
+
+Everything here is deliberately first-order: the model's job is to
+*rank* candidate specs and *bound* their error so measurement budget is
+spent only where it can matter, not to replace measurement.  See
+docs/analysis.md ("Cost & error model") for the assumptions.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.analysis.machine import MachineProfile, get_machine
+from repro.core.types import ApproxSpec, Technique
+
+log = logging.getLogger("repro.analysis.cost")
+
+# Transcendentals lower to polynomial/rational kernels; weight them as a
+# handful of fused multiply-adds rather than one flop.
+TRANS_FLOPS = 8.0
+# Bytes per element: the repo's arrays are f32 end to end.
+_ELEM_BYTES = 4.0
+# Trip-count assumption for `while` loops, whose bound is not static.  It
+# appears on both sides of every speedup ratio, so its exact value only
+# matters for absolute times.
+DEFAULT_WHILE_TRIP = 32.0
+# Multiplicative headroom on every error bound: the skip-fraction and
+# residual models are first-order, the bound must not be.
+SITE_HEADROOM = 4.0
+
+
+# --------------------------------------------------------------------------
+# FLOP / byte counting over jaxprs
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostVector:
+    """FLOPs and bytes moved -- the two roofline numerators."""
+
+    flops: float = 0.0
+    bytes: float = 0.0
+
+    def __add__(self, other: "CostVector") -> "CostVector":
+        return CostVector(self.flops + other.flops, self.bytes + other.bytes)
+
+    def __mul__(self, k: float) -> "CostVector":
+        return CostVector(self.flops * k, self.bytes * k)
+
+    __rmul__ = __mul__
+
+    def to_json(self) -> Dict:
+        return {"flops": self.flops, "bytes": self.bytes}
+
+
+_TRANS = {
+    "exp", "exp2", "log", "log1p", "expm1", "sin", "cos", "tan", "asin",
+    "acos", "atan", "sinh", "cosh", "tanh", "asinh", "acosh", "atanh",
+    "erf", "erfc", "erf_inv", "logistic", "rsqrt", "sqrt", "cbrt", "pow",
+    "integer_pow", "lgamma", "digamma", "regularized_incomplete_beta",
+}
+
+# Layout / data-movement primitives: bytes but no arithmetic.
+_MOVE = {
+    "broadcast_in_dim", "reshape", "transpose", "rev", "slice",
+    "dynamic_slice", "dynamic_update_slice", "squeeze", "expand_dims",
+    "concatenate", "pad", "gather", "scatter", "copy", "convert_element_type",
+    "bitcast_convert_type", "iota", "stop_gradient", "device_put",
+    "split", "select_n",
+}
+
+
+def _size(var) -> float:
+    aval = getattr(var, "aval", None)
+    shape = getattr(aval, "shape", None)
+    if shape is None:
+        return 0.0
+    return float(np.prod(shape, dtype=np.float64)) if shape else 1.0
+
+
+def _io_bytes(eqn) -> float:
+    n = sum(_size(v) for v in eqn.invars if hasattr(v, "aval"))
+    n += sum(_size(v) for v in eqn.outvars)
+    return n * _ELEM_BYTES
+
+
+def _dot_flops(eqn) -> float:
+    dims = eqn.params.get("dimension_numbers")
+    out = sum(_size(v) for v in eqn.outvars)
+    if dims is None:
+        return 2.0 * out
+    (lhs_c, _), _ = dims
+    lhs_shape = getattr(eqn.invars[0].aval, "shape", ())
+    contract = 1.0
+    for ax in lhs_c:
+        if ax < len(lhs_shape):
+            contract *= float(lhs_shape[ax])
+    return 2.0 * out * contract
+
+
+def _sub_jaxprs(eqn) -> List:
+    """All (closed or open) sub-jaxprs of a higher-order equation."""
+    subs = []
+    for key in ("jaxpr", "cond_jaxpr", "body_jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in eqn.params:
+            subs.append(eqn.params[key])
+    if "branches" in eqn.params:
+        subs.extend(eqn.params["branches"])
+    return subs
+
+
+def _as_open(j):
+    return getattr(j, "jaxpr", j)
+
+
+def eqn_cost(eqn) -> CostVector:
+    """FLOP/byte cost of one equation (recursing into control flow)."""
+    name = eqn.primitive.name
+    bytes_ = _io_bytes(eqn)
+    out = sum(_size(v) for v in eqn.outvars)
+
+    if name in ("dot_general", "conv_general_dilated"):
+        return CostVector(_dot_flops(eqn), bytes_)
+    if name == "scan":
+        body = jaxpr_cost(_as_open(eqn.params["jaxpr"]))
+        length = float(eqn.params.get("length", 1) or 1)
+        return CostVector(body.flops * length, body.bytes * length + bytes_)
+    if name == "while":
+        body = jaxpr_cost(_as_open(eqn.params["body_jaxpr"]))
+        cond = jaxpr_cost(_as_open(eqn.params["cond_jaxpr"]))
+        trip = DEFAULT_WHILE_TRIP
+        return CostVector((body.flops + cond.flops) * trip,
+                          (body.bytes + cond.bytes) * trip + bytes_)
+    if name in ("cond", "switch") and "branches" in eqn.params:
+        branches = [jaxpr_cost(_as_open(b)) for b in eqn.params["branches"]]
+        return CostVector(max(b.flops for b in branches),
+                          max(b.bytes for b in branches) + bytes_)
+    if name == "pallas_call":
+        inner = eqn.params.get("jaxpr")
+        if inner is not None:
+            body = jaxpr_cost(_as_open(inner))
+            grid_mapping = eqn.params.get("grid_mapping")
+            grid = getattr(grid_mapping, "grid", ()) or ()
+            n_blocks = float(np.prod([g for g in grid if isinstance(g, int)],
+                                     dtype=np.float64)) if grid else 1.0
+            return CostVector(body.flops * n_blocks, bytes_)
+        return CostVector(0.0, bytes_)
+    subs = _sub_jaxprs(eqn)
+    if subs:  # pjit / remat / custom_*_call / closed_call ...
+        total = CostVector()
+        for sub in subs:
+            total = total + jaxpr_cost(_as_open(sub))
+        return total
+    if name in _MOVE:
+        return CostVector(0.0, bytes_)
+    if name in _TRANS:
+        return CostVector(out * TRANS_FLOPS, bytes_)
+    if name.startswith("reduce_") or name in ("argmax", "argmin",
+                                              "cumsum", "cumprod",
+                                              "cumlogsumexp", "cummax",
+                                              "cummin", "sort"):
+        inp = sum(_size(v) for v in eqn.invars if hasattr(v, "aval"))
+        return CostVector(inp, bytes_)
+    # default: one flop per output element (elementwise arithmetic,
+    # comparisons, selects, integer ops, RNG, ...)
+    return CostVector(out, bytes_)
+
+
+def jaxpr_cost(jaxpr) -> CostVector:
+    """Total FLOP/byte cost of an (open) jaxpr."""
+    total = CostVector()
+    for eqn in jaxpr.eqns:
+        total = total + eqn_cost(eqn)
+    return total
+
+
+def trace_cost(fn: Callable, *example_args) -> CostVector:
+    """Trace ``fn`` at ``example_args`` and count its cost."""
+    import jax
+    closed = jax.make_jaxpr(fn)(*example_args)
+    return jaxpr_cost(closed.jaxpr)
+
+
+# --------------------------------------------------------------------------
+# Per-site skip-fraction + overhead + residual models
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Site:
+    """One approximation site of an app, as the cost model sees it.
+
+    region:        cost of the approximable work *per decision invocation*
+                   (for perforation: the whole perforable loop per run).
+    invocations:   decision invocations over the whole workload.
+    in_dim:        input width per invocation (iACT probe cost scales
+                   with it).
+    rsd_scale:     the site's typical signal RSD -- calibrates how often a
+                   TAF threshold fires (p_act = t / (t + rsd_scale)).
+    dist_scale:    the site's typical input spread -- calibrates the iACT
+                   table-hit rate the same way.
+    n_iters:       perforable-loop length (drop_fraction needs it).
+    amplification: relative-error gain from this site to the QoI, from
+                   `errorprop.amplification` (or 1.0 when the region IS
+                   the QoI).
+    qoi_condition: additive residual floor for ill-conditioned QoIs --
+                   when the QoI crosses zero (option prices, logits),
+                   MAPE is heavy-tailed and even a vanishing absolute
+                   perturbation costs this much relative error.
+    """
+
+    region: CostVector = dataclasses.field(default_factory=CostVector)
+    invocations: float = 1.0
+    in_dim: int = 8
+    rsd_scale: float = 0.5
+    dist_scale: float = 0.5
+    n_iters: int = 8
+    amplification: float = 1.0
+    qoi_condition: float = 0.0
+
+
+def _taf_fraction(spec: ApproxSpec, site: Site) -> float:
+    t = spec.taf
+    p_act = t.rsd_threshold / (t.rsd_threshold + site.rsd_scale + 1e-30)
+    duty = t.prediction_size / (t.prediction_size + 1.0)
+    warmup = max(0.0, 1.0 - t.history_size / max(site.invocations, 1.0))
+    return p_act * duty * warmup
+
+
+def _iact_fraction(spec: ApproxSpec, site: Site) -> float:
+    t = spec.iact
+    return t.threshold / (t.threshold + site.dist_scale + 1e-30)
+
+
+def _skip_fraction(spec: ApproxSpec, site: Site) -> float:
+    if spec.technique == Technique.TAF:
+        return min(1.0, _taf_fraction(spec, site))
+    if spec.technique == Technique.IACT:
+        return min(1.0, _iact_fraction(spec, site))
+    if spec.technique == Technique.PERFORATION:
+        from repro.core.perforation import drop_fraction
+        return drop_fraction(site.n_iters, spec.perforation)
+    return 0.0
+
+
+def _skip_fraction_upper(spec: ApproxSpec, site: Site) -> float:
+    """Upper bound on the skip fraction, for the ERROR side of the
+    prediction. The speedup estimate wants the expected activation (the
+    `rsd_scale`/`dist_scale`-calibrated models above), but a bound must
+    survive the worst case: on highly redundant data the detector fires
+    at every opportunity, capped only by the technique's structure (TAF's
+    duty cycle and warmup; nothing for iACT). Perforation is structural,
+    so expected == upper."""
+    if spec.technique == Technique.TAF:
+        t = spec.taf
+        duty = t.prediction_size / (t.prediction_size + 1.0)
+        warmup = max(0.0, 1.0 - t.history_size / max(site.invocations, 1.0))
+        return duty * warmup
+    if spec.technique == Technique.IACT:
+        return 1.0
+    return _skip_fraction(spec, site)
+
+
+def _overhead(spec: ApproxSpec, site: Site) -> CostVector:
+    """Per-decision bookkeeping the technique adds (never skipped)."""
+    if spec.technique == Technique.TAF:
+        return CostVector(3.0 * spec.taf.history_size + 8.0,
+                          _ELEM_BYTES * spec.taf.history_size)
+    if spec.technique == Technique.IACT:
+        probe = spec.iact.table_size * 3.0 * site.in_dim
+        return CostVector(probe, _ELEM_BYTES * spec.iact.table_size
+                          * site.in_dim)
+    return CostVector()
+
+
+def _site_residual(spec: ApproxSpec, site: Site) -> float:
+    """Relative error introduced per approximated invocation."""
+    if spec.technique == Technique.TAF:
+        # RSD threshold bounds the window's spread; each of the pSize
+        # predicted invocations can drift by up to that much again.
+        return (site.qoi_condition
+                + spec.taf.rsd_threshold * (1.0 + spec.taf.prediction_size))
+    if spec.technique == Technique.IACT:
+        # An input within `threshold` of a table entry reuses its output;
+        # with the site's spread as the scale, the relative input (and,
+        # to first order, output) perturbation is their ratio.
+        return (site.qoi_condition
+                + spec.iact.threshold / max(site.dist_scale, 1e-30))
+    if spec.technique == Technique.PERFORATION:
+        return 1.0  # a dropped iteration's contribution is fully lost
+    return 0.0
+
+
+# --------------------------------------------------------------------------
+# The predictor
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class CostPrediction:
+    """What the model claims about one spec, before any execution."""
+
+    speedup: float            # t_precise / t_approx on the target machine
+    error_bound: float        # conservative relative QoI error
+    skip_fraction: float      # predicted fraction of work approximated
+    flop_fraction: float      # approx FLOPs / precise FLOPs
+    t_precise_s: float
+    t_approx_s: float
+    modeled: bool = True      # False: no site for this technique -> neutral
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+_NEUTRAL = CostPrediction(speedup=1.0, error_bound=0.0, skip_fraction=0.0,
+                          flop_fraction=1.0, t_precise_s=0.0,
+                          t_approx_s=0.0, modeled=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class AppCostModel:
+    """Static speedup/error predictor for one app on one machine.
+
+    total:       whole-workload precise cost (must contain every site's
+                 ``region * invocations``).
+    sites:       per-technique approximation sites.
+    dispatches:  kernel dispatch count (identical on both sides; floors
+                 the runtime of tiny regions via ``dispatch_s``).
+    """
+
+    name: str
+    total: CostVector
+    sites: Dict[Technique, Site]
+    machine: MachineProfile = dataclasses.field(
+        default_factory=lambda: get_machine())
+    dispatches: float = 1.0
+
+    def predict(self, spec: ApproxSpec) -> CostPrediction:
+        if not spec.enabled:
+            t = self.machine.time_s(self.total.flops, self.total.bytes,
+                                    invocations=self.dispatches)
+            return CostPrediction(1.0, 0.0, 0.0, 1.0, t, t)
+        site = self.sites.get(spec.technique)
+        if site is None:
+            return _NEUTRAL
+        f = _skip_fraction(spec, site)
+        over = _overhead(spec, site) * site.invocations
+        saved = site.region * (f * site.invocations)
+        apx_flops = max(self.total.flops - saved.flops + over.flops, 0.0)
+        apx_bytes = max(self.total.bytes - saved.bytes + over.bytes, 0.0)
+        t_pre = self.machine.time_s(self.total.flops, self.total.bytes,
+                                    invocations=self.dispatches)
+        t_apx = self.machine.time_s(apx_flops, apx_bytes,
+                                    invocations=self.dispatches)
+        err = (SITE_HEADROOM * site.amplification
+               * _skip_fraction_upper(spec, site)
+               * _site_residual(spec, site))
+        return CostPrediction(
+            speedup=t_pre / max(t_apx, 1e-30),
+            error_bound=err,
+            skip_fraction=f,
+            flop_fraction=apx_flops / max(self.total.flops, 1e-30),
+            t_precise_s=t_pre,
+            t_approx_s=t_apx)
+
+    # -- pruning / seeding -------------------------------------------------
+
+    def select(self, specs: Sequence[ApproxSpec], *,
+               min_speedup: float = 1.0,
+               max_error: Optional[float] = None
+               ) -> Tuple[List[ApproxSpec], List[ApproxSpec]]:
+        """(kept, dropped): drop specs predicted sub-``min_speedup`` or
+        above ``max_error``. NONE and unmodeled specs are always kept."""
+        kept, dropped = [], []
+        for spec in specs:
+            p = self.predict(spec)
+            if not spec.enabled or not p.modeled:
+                kept.append(spec)
+            elif p.speedup < min_speedup:
+                dropped.append(spec)
+            elif max_error is not None and p.error_bound > max_error:
+                dropped.append(spec)
+            else:
+                kept.append(spec)
+        return kept, dropped
+
+    def select_band(self, specs: Sequence[ApproxSpec], *,
+                    budget: Optional[int] = None,
+                    band: float = 0.10) -> List[ApproxSpec]:
+        """Specs inside the predicted-front band, best (lowest regret)
+        first.
+
+        A spec's regret is its relative speedup deficit against the
+        predicted-(error_bound, speedup) Pareto front: 0 on the front,
+        else the smallest gap to a dominating prediction.  Specs within
+        ``band`` relative regret survive; ``budget`` truncates the
+        ranking.  NONE / unmodeled specs rank first (they anchor sweeps
+        and cost the model nothing to keep).
+        """
+        from repro.core.harness import spec_key
+
+        scored = []
+        preds = [(spec, self.predict(spec)) for spec in specs]
+        modeled = [(s, p) for s, p in preds if s.enabled and p.modeled]
+        for spec, p in preds:
+            if not spec.enabled or not p.modeled:
+                scored.append((-1.0, spec_key(spec), spec))
+                continue
+            regret = 0.0
+            for _, q in modeled:
+                if (q.error_bound <= p.error_bound
+                        and q.speedup > p.speedup):
+                    gap = (q.speedup - p.speedup) / max(q.speedup, 1e-30)
+                    regret = max(regret, gap)
+            scored.append((regret, spec_key(spec), spec))
+        scored.sort(key=lambda t: (t[0], t[1]))
+        picked = [s for r, _, s in scored if r <= band]
+        if budget is not None:
+            picked = picked[:max(budget, 0)]
+        return picked
+
+
+def filter_specs(model: Union[AppCostModel,
+                              Callable[[ApproxSpec], CostPrediction]],
+                 specs: Sequence[ApproxSpec], *,
+                 min_speedup: float = 1.0,
+                 max_error: Optional[float] = None,
+                 context: str = "sweep"
+                 ) -> Tuple[List[ApproxSpec], List[ApproxSpec]]:
+    """Shared pruning entry point for sweep/autotune/calibrate.
+
+    Accepts an ``AppCostModel`` or any ``spec -> CostPrediction``
+    callable; logs the kept/dropped count so pruned sweeps are auditable.
+    """
+    specs = list(specs)
+    if isinstance(model, AppCostModel):
+        kept, dropped = model.select(specs, min_speedup=min_speedup,
+                                     max_error=max_error)
+    else:
+        kept, dropped = [], []
+        for spec in specs:
+            p = model(spec)
+            if not spec.enabled or not getattr(p, "modeled", True):
+                kept.append(spec)
+            elif p.speedup < min_speedup:
+                dropped.append(spec)
+            elif max_error is not None and p.error_bound > max_error:
+                dropped.append(spec)
+            else:
+                kept.append(spec)
+    log.info("predict[%s]: kept %d / dropped %d of %d specs "
+             "(min_speedup=%.3g%s)", context, len(kept), len(dropped),
+             len(specs), min_speedup,
+             "" if max_error is None else f", max_error={max_error:.3g}")
+    return kept, dropped
+
+
+# --------------------------------------------------------------------------
+# Generic ladder model (rule A006 / qos pre-screen fallback)
+# --------------------------------------------------------------------------
+
+def ladder_model(machine=None, *, region_flops: float = 4096.0,
+                 invocations: float = 256.0, in_dim: int = 16,
+                 n_iters: int = 8, name: str = "ladder") -> AppCostModel:
+    """A deliberately generic single-site-per-technique model for
+    screening QoS ladders whose app is not in hand (rule A006).
+
+    The defaults describe a small serving region: ~4k FLOPs per decision
+    invocation over a 16-wide input.  At that scale the technique
+    *overheads* dominate the screen -- an iACT rung with an oversized
+    table (probe cost ``tSize * 3 * in_dim`` > region FLOPs) or a TAF
+    rung whose window upkeep exceeds what it skips predicts sub-1x
+    regardless of threshold, which is exactly the class of
+    misconfiguration a static pre-screen can reject.
+    """
+    prof = get_machine(machine)
+    region = CostVector(region_flops, region_flops * _ELEM_BYTES / 2.0)
+    site = Site(region=region, invocations=invocations, in_dim=in_dim,
+                n_iters=n_iters)
+    return AppCostModel(
+        name=name,
+        total=region * invocations,
+        sites={Technique.TAF: site, Technique.IACT: site,
+               Technique.PERFORATION: site},
+        machine=prof,
+        # one fused launch for the whole ladder region: decision
+        # invocations live inside the traced program, not as dispatches
+        dispatches=1.0)

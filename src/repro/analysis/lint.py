@@ -40,6 +40,8 @@ def run_lint(*, apps: Sequence[str] = APP_NAMES,
         "A003": lambda: rules_mod.rule_a003(apps),
         "A004": lambda: rules_mod.rule_a004(policies, model_taf=model_taf),
         "A005": lambda: rules_mod.rule_a005(apps),
+        "A006": lambda: rules_mod.rule_a006(policies),
+        "A007": lambda: rules_mod.rule_a007(apps),
     }
     for rid in rules_mod.RULE_IDS:
         if rid not in rules:
@@ -68,7 +70,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
         description="approxlint: static analysis for approximation "
-        "regions, kernels, and QoS ladders (rules A001-A005)")
+        "regions, kernels, and QoS ladders (rules A001-A007)")
     ap.add_argument("--apps", default="all",
                     help="comma-separated target groups "
                     f"({','.join(APP_NAMES)}) or 'all'")

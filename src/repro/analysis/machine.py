@@ -1,0 +1,85 @@
+"""Named machine profiles: the single source of truth for hardware
+constants.
+
+Both the roofline analyzer (`repro.launch.roofline`) and the analytical
+cost model (`repro.analysis.cost`) compose time estimates from the same
+three roofline terms:
+
+  compute_s    = FLOPs / peak_flops
+  memory_s     = bytes / hbm_bw
+  collective_s = collective_bytes / ici_bw
+
+Before this module those constants lived (twice -- docstring and body) in
+`launch/roofline.py`; now every consumer resolves a profile by name from
+``MACHINES``, lumos-style: a small named-parameter table instead of
+scattered literals.  Profiles are frozen dataclasses so a profile object
+is hashable and safe to close over in cached model builders.
+
+``dispatch_s`` models the fixed per-invocation launch/dispatch overhead
+that floors the runtime of tiny regions: an approximation that removes
+FLOPs but not invocations cannot beat ``t >= dispatch_s``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Union
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineProfile:
+    """Roofline parameters of one execution substrate."""
+
+    name: str
+    peak_flops: float        # FLOP/s per chip (bf16 for TPU profiles)
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    dispatch_s: float = 0.0  # fixed per-invocation dispatch overhead
+
+    def time_s(self, flops: float, bytes_: float = 0.0,
+               coll_bytes: float = 0.0, invocations: float = 1.0) -> float:
+        """Roofline time: max of the three terms, floored by dispatch."""
+        t = max(flops / self.peak_flops,
+                bytes_ / self.hbm_bw,
+                coll_bytes / self.ici_bw)
+        return t + invocations * self.dispatch_s
+
+
+MACHINES: Dict[str, MachineProfile] = {
+    # TPU v5e-class chip (constants from the brief): the target substrate
+    # for roofline analysis and the default for cost prediction.
+    "tpu-v5e": MachineProfile(name="tpu-v5e", peak_flops=197e12,
+                              hbm_bw=819e9, ici_bw=50e9,
+                              dispatch_s=2e-6),
+    # Host interpreter (CPU emulation of the techniques): orders of
+    # magnitude slower, dispatch-dominated for small regions.  Used when
+    # predicting for the host substrate so sub-1x overhead regimes (e.g.
+    # oversized iACT tables) surface at realistic scales.
+    "host-sim": MachineProfile(name="host-sim", peak_flops=100e9,
+                               hbm_bw=40e9, ici_bw=10e9,
+                               dispatch_s=20e-6),
+}
+
+DEFAULT_MACHINE = "tpu-v5e"
+
+# substrate name (repro.core.substrate) -> machine profile name
+SUBSTRATE_MACHINES: Dict[str, str] = {
+    "pallas": "tpu-v5e",
+    "host": "host-sim",
+}
+
+
+def get_machine(machine: Union[str, MachineProfile, None] = None
+                ) -> MachineProfile:
+    """Resolve a profile by name (or pass one through). ``None`` gives the
+    default profile; substrate names ("host" / "pallas") are accepted and
+    mapped through ``SUBSTRATE_MACHINES``."""
+    if machine is None:
+        machine = DEFAULT_MACHINE
+    if isinstance(machine, MachineProfile):
+        return machine
+    name = SUBSTRATE_MACHINES.get(machine, machine)
+    if name not in MACHINES:
+        raise KeyError(
+            f"unknown machine profile {machine!r} "
+            f"(choose from: {', '.join(sorted(MACHINES))})")
+    return MACHINES[name]

@@ -472,4 +472,107 @@ def rule_a005(apps: Sequence[str]) -> List[Finding]:
     return check_engine_placement(engine)
 
 
-RULE_IDS = ("A001", "A002", "A003", "A004", "A005")
+# --------------------------------------------------------------------------
+# A006 -- ladder rung with predicted sub-1x speedup
+# --------------------------------------------------------------------------
+
+def check_policy_cost(doc: Dict, *, subject: str = "policy",
+                      machine=None) -> List[Finding]:
+    """The A006 pass over a policy JSON document: run every rung's spec
+    through the analytical cost model (`repro.analysis.cost`) on the
+    target machine and flag rungs whose PREDICTED speedup is sub-1x.
+
+    A004 catches rungs whose *measured* numbers are dominated; A006
+    catches the rungs nobody measured yet -- e.g. an iACT rung whose
+    table-probe overhead (tSize * 3 * in_dim FLOPs per decision) exceeds
+    the region it memoizes. Those rungs burn quality for a slowdown on
+    the target substrate and should never ship."""
+    from repro.analysis import cost as cost_mod
+    from repro.core.harness import spec_from_dict
+
+    model = cost_mod.ladder_model(machine or doc.get("substrate"))
+    findings: List[Finding] = []
+    for i, e in enumerate(doc.get("entries", [])):
+        spec_d = e.get("spec", {})
+        if spec_d.get("technique", "none") == "none":
+            continue
+        try:
+            spec = spec_from_dict(spec_d)
+        except Exception:  # noqa: BLE001 -- unparseable spec is A004's job
+            continue
+        pred = model.predict(spec)
+        if pred.modeled and pred.speedup <= 1.0:
+            findings.append(Finding(
+                "A006", Severity.ERROR, f"{subject}#rung{i}",
+                f"rung's predicted speedup on {model.machine.name} is "
+                f"{pred.speedup:.3f}x (<= 1x): the technique's overhead "
+                "exceeds the work it can skip -- the rung trades quality "
+                "for a slowdown",
+                {"spec": spec_d, "predicted_speedup": pred.speedup,
+                 "skip_fraction": pred.skip_fraction,
+                 "machine": model.machine.name}))
+    return findings
+
+
+def rule_a006(policy_paths: Sequence[str], machine=None) -> List[Finding]:
+    findings: List[Finding] = []
+    for path in policy_paths:
+        sub = f"policy:{path}"
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except Exception:  # noqa: BLE001 -- A004 reports unreadable files
+            continue
+        findings += check_policy_cost(doc, subject=sub, machine=machine)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# A007 -- error amplifies unboundedly through a loop carry
+# --------------------------------------------------------------------------
+
+def check_divergence(fn, example_args, tainted: Sequence[str],
+                     subject: str) -> List[Finding]:
+    """Inject unit relative error at the approximate-value leaves and
+    propagate it through the traced jaxpr (`repro.analysis.errorprop`).
+    A `while` carry whose per-iteration error gain stays > 1 at the
+    fixpoint is statically divergent: the loop runs until a data-dependent
+    condition, so no finite bound exists -- the paper's MiniFE pathology
+    ('locally introduced errors propagate through subsequent iterations')
+    lifted to lint time."""
+    import jax
+
+    from repro.analysis import errorprop
+
+    closed = jax.make_jaxpr(fn)(*example_args)
+    positions = targets_mod.tainted_positions(example_args, tainted)
+    if not positions:
+        return [Finding("A007", Severity.WARNING, subject,
+                        "no tainted input leaves matched; divergence "
+                        "unchecked", {"needles": list(tainted)})]
+    findings = []
+    for rep in errorprop.find_divergent_carries(closed, positions):
+        findings.append(Finding(
+            "A007", Severity.ERROR, subject,
+            f"approximation error amplifies unboundedly through a "
+            f"{rep.kind} carry (per-iteration gain {rep.gain:.3g} > 1, "
+            "no static trip bound): locally small residuals diverge "
+            "through subsequent iterations",
+            {"loop": rep.to_json()}))
+    return findings
+
+
+def rule_a007(apps: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    tt = []
+    if "regions" in apps:
+        tt += targets_mod.region_taint_targets()
+    if "decode" in apps:
+        tt.append(targets_mod.serve_taint_target())
+    for t in tt:
+        fn, example_args = t.build()
+        findings += check_divergence(fn, example_args, t.tainted, t.subject)
+    return findings
+
+
+RULE_IDS = ("A001", "A002", "A003", "A004", "A005", "A006", "A007")

@@ -1,11 +1,12 @@
 """Roofline analysis from compiled dry-run artifacts.
 
 Three terms per (arch x shape) on the single-pod mesh (hardware constants
-per the brief -- TPU v5e-class):
+from the shared machine table, `repro.analysis.machine` -- TPU v5e-class
+profile by default):
 
-  compute_s    = HLO_FLOPs_per_device / 197e12          (bf16 peak)
-  memory_s     = HLO_bytes_per_device / 819e9           (HBM bw)
-  collective_s = collective_bytes_per_device / 50e9     (ICI link bw)
+  compute_s    = HLO_FLOPs_per_device / peak_flops      (bf16 peak)
+  memory_s     = HLO_bytes_per_device / hbm_bw          (HBM bw)
+  collective_s = collective_bytes_per_device / ici_bw   (ICI link bw)
 
 Scan caveat (verified empirically): XLA cost analysis counts a while body
 ONCE regardless of trip count. Terms are therefore composed from UNROLLED
@@ -42,10 +43,14 @@ from repro.optim import adamw
 from repro.runtime import hlo as hlo_mod
 from repro.runtime import sharding as shardlib
 
-# hardware constants (from the brief)
-PEAK_FLOPS = 197e12          # bf16 / chip
-HBM_BW = 819e9               # bytes/s / chip
-ICI_BW = 50e9                # bytes/s / link
+from repro.analysis.machine import get_machine
+
+# hardware constants: one source of truth, shared with the analytical cost
+# model (repro.analysis.cost) via the named machine-profile table
+_MACHINE = get_machine("tpu-v5e")
+PEAK_FLOPS = _MACHINE.peak_flops     # bf16 / chip
+HBM_BW = _MACHINE.hbm_bw             # bytes/s / chip
+ICI_BW = _MACHINE.ici_bw             # bytes/s / link
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "results", "roofline")

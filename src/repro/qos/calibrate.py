@@ -102,6 +102,61 @@ def set_decode_threshold(cache, value):
     return dict(cache, taf=taf)
 
 
+def decode_cost_model(cfg=None, *, batch: int = 2, gen: int = 16,
+                      machine=None):
+    """An `analysis.cost.AppCostModel` for the decode workload, built from
+    the config's shape constants alone (no tracing, no model build).
+
+    Per layer-step the decode does ~12*d_model^2 FLOPs per sequence
+    (attention projections + MLP, weights-resident), and one TAF decision
+    gates each layer-step. The per-site error amplification is
+    `sqrt(gen)`: an approximated layer-step feeds subsequent steps
+    through the KV cache, but per-step residuals are independently
+    signed, so the first-order accumulation is a random walk, not the
+    worst-case linear stack (which would reject every rung the measured
+    ladders accept).
+    """
+    import math
+
+    from repro.analysis.cost import AppCostModel, CostVector, Site
+    from repro.analysis.machine import get_machine
+
+    cfg = cfg if cfg is not None else default_decode_cfg()
+    d = int(getattr(cfg, "d_model", 64))
+    n_layers = int(getattr(cfg, "n_layers", 2))
+    flops_per_step = 12.0 * d * d * batch
+    weight_bytes = 12.0 * d * d * 4.0
+    region = CostVector(flops_per_step, weight_bytes)
+    invocations = float(n_layers * gen)
+    site = Site(region=region, invocations=invocations,
+                in_dim=d, amplification=math.sqrt(gen))
+    return AppCostModel(
+        name="taf_decode",
+        total=region * invocations,
+        sites={Technique.TAF: site},
+        machine=get_machine(machine),
+        dispatches=float(gen))
+
+
+def prescreen_thresholds(cfg, thresholds: Sequence[float], *,
+                         batch: int = 2, gen: int = 16, machine=None,
+                         min_speedup: float = 1.0,
+                         max_error: float = None) -> List[ApproxSpec]:
+    """Cost-model pre-screen for a calibration sweep: the threshold grid
+    with statically hopeless rungs removed (predicted speedup below
+    `min_speedup`, or predicted error bound over `max_error`), so
+    `harness.sweep(make_decode_app(cfg), ...)` measures only plausible
+    candidates. The kept/dropped count is logged by the shared
+    `analysis.cost.filter_specs` path."""
+    from repro.analysis.cost import filter_specs
+
+    model = decode_cost_model(cfg, batch=batch, gen=gen, machine=machine)
+    kept, _ = filter_specs(model, threshold_grid(cfg, thresholds),
+                           min_speedup=min_speedup, max_error=max_error,
+                           context="qos.calibrate")
+    return kept
+
+
 def make_decode_app(cfg=None, *, batch: int = 2, prompt_len: int = 8,
                     gen: int = 16, seed: int = 0,
                     metric: str = "mape") -> ApproxApp:

@@ -314,6 +314,102 @@ def test_a004_unreadable_file_reported():
     assert "unreadable" in findings[0].message
 
 
+# --------------------------------- A006: statically-hopeless rungs
+
+def _iact_rung(tsize, thresh, error, speedup):
+    from repro.core.harness import spec_hash
+    spec = {"technique": "iact", "level": "block", "tSize": tsize,
+            "thresh": thresh, "tPerBlock": 1}
+    return {"spec": spec, "error": error, "speedup": speedup,
+            "modeled_speedup": speedup, "spec_hash": spec_hash(spec)}
+
+
+def test_a006_oversized_iact_table_flagged():
+    """An iACT rung whose table probes out-cost the memoized region: the
+    measured ladder may look fine (A004-clean), but the predicted speedup
+    on the target machine is sub-1x -- a rung that should never ship."""
+    doc = _doc([_precise_rung(), _iact_rung(4096, 0.2, 0.01, 1.5)])
+    findings = rules_mod.check_policy_cost(doc, subject="p")
+    assert [f.rule for f in findings] == ["A006"]
+    assert findings[0].subject == "p#rung1"
+    assert findings[0].severity is rules_mod.Severity.ERROR
+    assert findings[0].detail["predicted_speedup"] <= 1.0
+
+
+def test_a006_plausible_ladder_clean():
+    doc = _doc([_precise_rung(), _rung(0.5, 0.01, 1.2),
+                _iact_rung(2, 0.2, 0.04, 1.1)])
+    assert rules_mod.check_policy_cost(doc, subject="p") == []
+
+
+def test_a006_unparseable_spec_left_to_a004():
+    doc = _doc([_precise_rung(),
+                {"spec": {"technique": "taf", "hSize": -1},
+                 "error": 0.01, "speedup": 1.5}])
+    assert rules_mod.check_policy_cost(doc, subject="p") == []
+
+
+def test_a006_policy_file_roundtrip(tmp_path):
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(
+        _doc([_precise_rung(), _iact_rung(4096, 0.2, 0.01, 1.5)])))
+    good = tmp_path / "good.json"
+    good.write_text(json.dumps(_doc([_precise_rung(),
+                                     _rung(0.5, 0.01, 1.2)])))
+    findings = rules_mod.rule_a006([str(bad), str(good)])
+    assert [f.rule for f in findings] == ["A006"]
+    assert str(bad) in findings[0].subject
+
+
+# --------------------------------- A007: divergent loop carries
+
+def _while_program(body_update):
+    """A while loop with a data-dependent trip count whose carry folds in
+    the tainted memo value via `body_update(v, memo_scalar)`."""
+    def fn(state, x):
+        def cond(c):
+            _, v = c
+            return v < 1e6
+        def body(c):
+            i, v = c
+            return i + 1, body_update(v, state["memo"][0])
+        return jax.lax.while_loop(cond, body, (jnp.int32(0), x))
+    args = ({"memo": jnp.ones((4,), jnp.float32)}, jnp.float32(1.0))
+    return fn, args
+
+
+def test_a007_amplifying_while_carry_flagged():
+    # v <- 2v + memo: the carry's relative error grows every iteration
+    # and the trip count is data-dependent -- no static bound exists
+    fn, args = _while_program(lambda v, m: 2.0 * v + m)
+    findings = rules_mod.check_divergence(fn, args, ("memo",), "toy.loop")
+    assert [f.rule for f in findings] == ["A007"]
+    assert findings[0].severity is rules_mod.Severity.ERROR
+    assert findings[0].detail["loop"]["kind"] == "while"
+    assert findings[0].detail["loop"]["gain"] > 1.0
+
+
+def test_a007_bounded_while_carry_clean():
+    # v <- max(v, memo): the carry error saturates at the injected bound
+    # (max is error-preserving), so the fixpoint converges -- no finding
+    fn, args = _while_program(jnp.maximum)
+    assert rules_mod.check_divergence(fn, args, ("memo",), "toy.loop") == []
+
+
+def test_a007_no_tainted_leaves_is_a_warning():
+    fn, args = _while_program(lambda v, m: 2.0 * v + m)
+    findings = rules_mod.check_divergence(fn, args, ("nonexistent",), "toy")
+    assert [f.rule for f in findings] == ["A007"]
+    assert findings[0].severity is rules_mod.Severity.WARNING
+    assert "unchecked" in findings[0].message
+
+
+def test_a007_committed_region_steps_clean():
+    """The shipped region step programs must not amplify their memoized
+    values unboundedly -- the same contract the tree-wide lint enforces."""
+    assert rules_mod.rule_a007(("regions",)) == []
+
+
 # ------------------------------------------- A005 + the two lint hooks
 
 @pytest.fixture(scope="module")

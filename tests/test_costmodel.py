@@ -1,0 +1,170 @@
+"""Tests for the analytical cost/error predictor (repro.analysis.cost)
+against MEASURED sweeps: rank correlation, bound conservatism, pruning
+semantics, and (via hypothesis) knob monotonicity of the closed forms."""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)                            # benchmarks package
+sys.path.insert(0, os.path.join(REPO, "examples"))  # apps package
+
+from repro.analysis.cost import (AppCostModel, CostVector, Site,
+                                 filter_specs, ladder_model, trace_cost)
+from repro.core.harness import spec_from_dict, sweep, taf_grid
+from repro.core.types import (ApproxSpec, Level, PerforationKind,
+                              PerforationParams, TAFParams, Technique)
+
+
+def _model():
+    return ladder_model()
+
+
+# ------------------------------------------------ measured validation
+
+def test_blackscholes_rank_correlation_and_bounds():
+    """The predictor must rank the blackscholes TAF grid like the measured
+    structural speedups do, and its error bound must dominate every
+    measured error (conservatism contract)."""
+    from benchmarks import costmodel
+
+    app = costmodel._make_app("blackscholes")
+    model = costmodel.blackscholes_model(
+        **costmodel._WORKLOADS["blackscholes"])
+    grid = costmodel._validation_grid("blackscholes")
+    recs = sweep(app, grid, repeats=1)
+    preds = [model.predict(costmodel._spec_of(r)) for r in recs]
+
+    rho = costmodel.spearman([p.speedup for p in preds],
+                             [r.modeled_speedup for r in recs])
+    assert rho >= 0.9, (rho, [p.speedup for p in preds],
+                        [r.modeled_speedup for r in recs])
+    for p, r in zip(preds, recs):
+        assert p.error_bound >= r.error, (r.spec, p.error_bound, r.error)
+
+
+def test_ffn_band_recovers_committed_front():
+    """Acceptance statistic: the predicted front band (<= 1/5 of the grid)
+    measured alone must recover the committed full-grid front's
+    hypervolume within FRONT_TOLERANCE, and the predictor must rank the
+    band like the measured structural speedups."""
+    from apps import approx_ffn
+    from benchmarks import approx_ffn_sweep, costmodel
+    from repro.core import pareto
+
+    grid = approx_ffn_sweep._grid()
+    model = costmodel.ffn_model()
+    budget = len(grid) // 5
+    band = model.select_band(grid, budget=budget)
+    assert 0 < len(band) <= budget
+
+    app = approx_ffn.make_app(substrate="pallas")
+    recs = sweep(app, band, repeats=1)
+    fs = pareto.front_summary(recs, use_modeled=True)
+
+    import json
+    base = os.path.join(REPO, "benchmarks", "baselines", "BENCH_ffn.json")
+    with open(base) as f:
+        base_hv = json.load(f)["front"]["hypervolume"]
+    assert fs["hypervolume"] >= costmodel.FRONT_TOLERANCE * base_hv
+
+    rho = costmodel.spearman(
+        [model.predict(costmodel._spec_of(r)).speedup for r in recs],
+        [r.modeled_speedup for r in recs])
+    assert rho >= 0.9, rho
+
+
+# ------------------------------------------------ pruning semantics
+
+def test_filter_specs_keeps_precise_and_unmodeled():
+    """NONE specs and specs for techniques the model has no site for are
+    never pruned -- the predictor only drops what it can actually model."""
+    model = AppCostModel(
+        name="taf_only", total=CostVector(4096.0, 8192.0),
+        sites={Technique.TAF: Site(region=CostVector(16.0, 32.0),
+                                   invocations=256.0)})
+    specs = [ApproxSpec(Technique.NONE),
+             ApproxSpec(Technique.IACT),                  # unmodeled
+             ApproxSpec(Technique.TAF,
+                        taf=TAFParams(2, 4, 0.5))]
+    kept, dropped = filter_specs(model, specs, min_speedup=10.0)
+    assert specs[0] in kept and specs[1] in kept
+    assert specs[2] in dropped                            # can't reach 10x
+
+
+def test_select_band_respects_budget():
+    model = _model()
+    grid = taf_grid(h_sizes=(2, 3), p_sizes=(2, 4),
+                    thresholds=(0.05, 0.2, 1.0), levels=(Level.ELEMENT,))
+    band = model.select_band(grid, budget=4)
+    assert len(band) <= 4
+
+
+def test_oversized_iact_table_predicts_sub_1x():
+    """The A006 signal: an iACT rung whose table lookups cost more than
+    the region they replace predicts a slowdown."""
+    from repro.core.types import IACTParams
+    model = _model()
+    bad = ApproxSpec(Technique.IACT,
+                     iact=IACTParams(table_size=4096, threshold=0.2))
+    ok = ApproxSpec(Technique.IACT,
+                    iact=IACTParams(table_size=2, threshold=0.2))
+    assert model.predict(bad).speedup <= 1.0
+    assert model.predict(ok).speedup > 1.0
+
+
+def test_sweep_predict_prunes_and_autotune_threads(tmp_path):
+    """harness.sweep(predict=...) measures only the kept specs."""
+    from benchmarks import costmodel
+
+    app = costmodel._make_app("blackscholes")
+    model = costmodel.blackscholes_model(
+        **costmodel._WORKLOADS["blackscholes"])
+    grid = costmodel._validation_grid("blackscholes")
+    # an impossible speedup floor prunes every modeled spec
+    recs = sweep(app, grid, repeats=1, predict=model,
+                 predict_min_speedup=1e9)
+    assert recs == []
+    kept = sweep(app, grid, repeats=1, predict=model)
+    assert len(kept) == len(grid)       # all rungs are plausible here
+
+
+# ---------------------------------------- closed-form monotonicity
+# (deterministic grids; the hypothesis variants with randomized knob
+# pairs live in tests/test_properties.py, which skips when hypothesis
+# is not installed)
+
+class TestMonotonicity:
+    def test_perforation_speedup_monotone_in_fraction(self):
+        model = _model()
+        spds = [model.predict(ApproxSpec(
+            Technique.PERFORATION,
+            perforation=PerforationParams(kind=PerforationKind.INI,
+                                          fraction=f))).speedup
+                for f in (0.1, 0.25, 0.5, 0.75, 0.9)]
+        assert all(b >= a - 1e-12 for a, b in zip(spds, spds[1:])), spds
+
+    def test_taf_error_bound_monotone_in_threshold(self):
+        model = _model()
+        bounds = [model.predict(ApproxSpec(
+            Technique.TAF, taf=TAFParams(2, 4, t))).error_bound
+                  for t in (0.01, 0.05, 0.2, 1.0, 5.0)]
+        assert all(b >= a - 1e-12 for a, b in zip(bounds, bounds[1:]))
+
+    def test_taf_speedup_monotone_in_threshold(self):
+        model = _model()
+        spds = [model.predict(ApproxSpec(
+            Technique.TAF, taf=TAFParams(2, 4, t))).speedup
+                for t in (0.01, 0.05, 0.2, 1.0, 5.0)]
+        assert all(b >= a - 1e-12 for a, b in zip(spds, spds[1:]))
+
+    def test_predictions_finite_and_nonnegative(self):
+        model = _model()
+        for t in (0.01, 0.5, 5.0):
+            p = model.predict(ApproxSpec(Technique.TAF,
+                                         taf=TAFParams(2, 4, t)))
+            assert p.error_bound >= 0.0
+            assert np.isfinite(p.error_bound) and np.isfinite(p.speedup)
+            assert 0.0 <= p.skip_fraction <= 1.0

@@ -275,3 +275,66 @@ class TestQosLadderProperties:
         assert p1.index == p2.index
         assert tuple(p1.shard_indices[p] for p in perm) == p2.shard_indices
         assert tuple(p1.shard_knobs[p] for p in perm) == p2.shard_knobs
+
+
+class TestCostModelProperties:
+    """Closed-form invariants of the analytical predictor
+    (repro.analysis.cost): knob monotonicity and bound sanity, over
+    randomized knob values rather than the fixed grids in
+    tests/test_costmodel.py."""
+
+    def _model(self):
+        from repro.analysis.cost import ladder_model
+        return ladder_model()
+
+    @SET
+    @given(st.floats(0.05, 0.9), st.floats(0.05, 0.9))
+    def test_perforation_speedup_monotone_in_fraction(self, f1, f2):
+        from repro.core.types import ApproxSpec, Technique
+        lo, hi = sorted((f1, f2))
+        model = self._model()
+
+        def spd(f):
+            return model.predict(ApproxSpec(
+                Technique.PERFORATION,
+                perforation=PerforationParams(kind=PerforationKind.INI,
+                                              fraction=f))).speedup
+
+        assert spd(hi) >= spd(lo) - 1e-12
+
+    @SET
+    @given(st.floats(0.01, 5.0), st.floats(0.01, 5.0))
+    def test_taf_error_bound_monotone_in_threshold(self, t1, t2):
+        from repro.core.types import ApproxSpec, Technique
+        lo, hi = sorted((t1, t2))
+        model = self._model()
+
+        def bound(t):
+            return model.predict(ApproxSpec(
+                Technique.TAF, taf=TAFParams(2, 4, t))).error_bound
+
+        assert bound(hi) >= bound(lo) - 1e-12
+
+    @SET
+    @given(st.floats(0.01, 5.0), st.floats(0.01, 5.0))
+    def test_taf_speedup_monotone_in_threshold(self, t1, t2):
+        from repro.core.types import ApproxSpec, Technique
+        lo, hi = sorted((t1, t2))
+        model = self._model()
+
+        def spd(t):
+            return model.predict(ApproxSpec(
+                Technique.TAF, taf=TAFParams(2, 4, t))).speedup
+
+        assert spd(hi) >= spd(lo) - 1e-12
+
+    @SET
+    @given(st.integers(1, 12), st.floats(0.01, 5.0))
+    def test_predictions_finite_and_skip_fraction_bounded(self, h, t):
+        from repro.core.types import ApproxSpec, Technique
+        model = self._model()
+        p = model.predict(ApproxSpec(Technique.TAF,
+                                     taf=TAFParams(h, 4, t)))
+        assert p.error_bound >= 0.0
+        assert np.isfinite(p.error_bound) and np.isfinite(p.speedup)
+        assert 0.0 <= p.skip_fraction <= 1.0
