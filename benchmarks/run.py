@@ -14,7 +14,8 @@ must be able to measure the named path -- see ``substrate_support()`` for
 the per-module table (`ffn` dispatches through `repro.core.substrate`,
 `kernel` is pallas-native, everything else host-only) -- so the flag can
 never silently measure the wrong path. ``--artifacts`` names a directory for machine-readable
-outputs (kernel_micro writes its structural numbers there as JSON;
+outputs (kernel_micro writes its structural numbers, its regression
+summary ``BENCH_kernel.json``, and the autotuner's ``tuning_cache.json``;
 qos_serving writes ``BENCH_qos.json``; approx_ffn_sweep writes
 ``BENCH_ffn.json``; costmodel validates the analytical predictor against
 measured sweeps and writes ``BENCH_costmodel.json``).
@@ -123,6 +124,26 @@ _BASELINE_CHECKS = {
                   "summary.warnings", "summary.allowlisted"),
         "close": (),
         "atleast": (),
+    },
+    # kernel microbenchmarks: oracle/pipeline parity, recompile counts and
+    # the tuned-beats-default verdict are deterministic (exact); the
+    # data-dependent skip fractions are deterministic up to float rounding
+    # (close); tuned-vs-default speedup ratios are wall-clock and only
+    # have to stay above the noise margin (absolute microseconds are
+    # machine-dependent and never gated).
+    "BENCH_kernel.json": {
+        "exact": ("metric", "substrate", "oracle_match.taf",
+                  "oracle_match.iact", "sweep.n", "sweep.recompiles",
+                  "pipeline_parity.taf_matmul",
+                  "pipeline_parity.perforated_matmul",
+                  "pipeline_parity.perforated_attention",
+                  "tuning.all_beat_default"),
+        "close": ("executed_grid_fraction.taf",
+                  "executed_grid_fraction.iact"),
+        "atleast": ("tuning.taf_matmul.speedup",
+                    "tuning.iact_rowfn.speedup",
+                    "tuning.perforated_matmul.speedup",
+                    "tuning.perforated_attention.speedup"),
     },
     # the analytical predictor's validation: kept/dropped grid counts are
     # structural (exact); rank correlations and the pruned-sweep front

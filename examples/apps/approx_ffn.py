@@ -50,9 +50,36 @@ from repro.core.harness import AppResult, ApproxApp
 from repro.core.types import ApproxSpec, PerforationKind, Technique
 
 # Block geometry: fixed by the app (structural; not part of the spec grid).
+# `make_app(blocks=...)` overrides it -- blocks are SEMANTIC here (approx
+# masks are block-granular), so a non-default geometry is a different
+# workload fingerprint, recorded in the app's workload dict.
 _BLOCK_M = 16      # taf_matmul row block => seq/16 temporal steps
 _BLOCK_ROWS = 16   # iact_rowfn rows per table block
 _BLOCK_ATTN = 32   # attention q/kv block => seq/32 KV blocks
+
+
+def _blocks3(blocks):
+    """(block_m, block_rows, block_attn) -- module defaults when None."""
+    return (_BLOCK_M, _BLOCK_ROWS, _BLOCK_ATTN) if blocks is None \
+        else tuple(blocks)
+
+
+def tuned_blocks(seq: int = 128, d: int = 32, d_h: int = 64,
+                 heads: int = 2) -> Tuple[int, int, int]:
+    """The tuning-cache blocks for this app's kernel shapes (per-kernel
+    exact-shape lookup through `kernels.tuning`), falling back to the
+    module defaults on any miss. `make_app(blocks="tuned")` resolves
+    through here."""
+    from repro.kernels import tuning
+    taf = tuning.tuned_config("taf_matmul", ((seq, d), (d, d))) or {}
+    iact = tuning.tuned_config("iact_rowfn",
+                               ((seq, d), (d, d_h), (d_h, d))) or {}
+    attn_shape = (1, heads, seq, d // heads)
+    attn = tuning.tuned_config("perforated_attention",
+                               (attn_shape, attn_shape)) or {}
+    return (int(taf.get("block_m", _BLOCK_M)),
+            int(iact.get("block_rows", _BLOCK_ROWS)),
+            int(attn.get("block_kv", attn.get("block_q", _BLOCK_ATTN))))
 
 
 def gen_inputs(seq: int, d: int, seed: int = 0) -> np.ndarray:
@@ -139,19 +166,22 @@ def _exact_runner(seq, d, d_h, heads, seed):
 
 
 @lru_cache(maxsize=64)
-def _pallas_knob_runner(key, seq, d, d_h, heads, seed):
+def _pallas_knob_runner(key, seq, d, d_h, heads, seed, blocks=None):
     """jitted `fn(knob) -> (qoi, approx_frac, mask)` for a batching
     static-structure key: the quality knob is a TRACED argument, so every
     spec in the group -- and, under `jax.vmap`, a whole stack of them --
-    shares this one compiled pipeline."""
+    shares this one compiled pipeline. `blocks` (an optional
+    (block_m, block_rows, block_attn) tuple) is part of the lru key:
+    default-geometry callers MUST omit it so they share one entry."""
     x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+    block_m, block_rows, block_attn = _blocks3(blocks)
     spec = batching.spec_from_key(key)
     tech = key[0]
 
     if tech == Technique.TAF:
         def body(knob):
             p, mask = substrate_mod.taf_matmul_region(
-                x, wp, spec, block_m=_BLOCK_M, block_n=d, rsd_threshold=knob)
+                x, wp, spec, block_m=block_m, block_n=d, rsd_threshold=knob)
             qoi = _ffn_exact(_attn_exact(p, heads), w1, w2)
             frac = jnp.mean(mask.astype(jnp.float32))
             return qoi, frac, mask
@@ -159,7 +189,7 @@ def _pallas_knob_runner(key, seq, d, d_h, heads, seed):
         def body(knob):
             a = _attn_exact(x @ wp, heads)
             qoi, mask = substrate_mod.iact_ffn_region(
-                a, w1, w2, spec, block_rows=_BLOCK_ROWS, threshold=knob)
+                a, w1, w2, spec, block_rows=block_rows, threshold=knob)
             frac = jnp.mean(mask.astype(jnp.float32))
             return qoi, frac, mask
     elif tech == Technique.PERFORATION:
@@ -167,7 +197,7 @@ def _pallas_knob_runner(key, seq, d, d_h, heads, seed):
             p = x @ wp
             q = _split_heads(p, heads)
             o, kept = substrate_mod.attention_region(
-                q, q, q, spec, block_q=_BLOCK_ATTN, block_kv=_BLOCK_ATTN,
+                q, q, q, spec, block_q=block_attn, block_kv=block_attn,
                 fraction=knob)
             qoi = _ffn_exact(_merge_heads(o), w1, w2)
             frac = 1.0 - jnp.mean(kept.astype(jnp.float32))
@@ -178,11 +208,12 @@ def _pallas_knob_runner(key, seq, d, d_h, heads, seed):
 
 
 @lru_cache(maxsize=64)
-def _pallas_structural_runner(perfo, seq, d, d_h, heads, seed):
+def _pallas_structural_runner(perfo, seq, d, d_h, heads, seed, blocks=None):
     """Structural (skip-driven) perforation: the kept set shapes the grid,
     so each distinct `perfo` is its own compile -- the herded payoff is that
     dropped KV blocks are never visited at all."""
     x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+    block_attn = _blocks3(blocks)[2]
     spec = ApproxSpec(Technique.PERFORATION, perforation=perfo)
 
     @jax.jit
@@ -190,7 +221,7 @@ def _pallas_structural_runner(perfo, seq, d, d_h, heads, seed):
         p = x @ wp
         q = _split_heads(p, heads)
         o, kept = substrate_mod.attention_region(
-            q, q, q, spec, block_q=_BLOCK_ATTN, block_kv=_BLOCK_ATTN)
+            q, q, q, spec, block_q=block_attn, block_kv=block_attn)
         qoi = _ffn_exact(_merge_heads(o), w1, w2)
         frac = 1.0 - jnp.mean(kept.astype(jnp.float32))
         return qoi, frac, jnp.logical_not(kept)
@@ -201,13 +232,14 @@ def _pallas_structural_runner(perfo, seq, d, d_h, heads, seed):
 # Host substrate: the ref.py oracles (identical block semantics, eager)
 # ---------------------------------------------------------------------------
 
-def _host_eval(spec: ApproxSpec, seq, d, d_h, heads, seed):
+def _host_eval(spec: ApproxSpec, seq, d, d_h, heads, seed, blocks=None):
     from repro.kernels import ref
     x, wp, w1, w2 = _arrays(seq, d, d_h, heads, seed)
+    block_m, block_rows, block_attn = _blocks3(blocks)
     t = spec.technique
     if t == Technique.TAF:
         p, mask = ref.taf_matmul_ref(
-            x, wp, block_m=_BLOCK_M, block_n=d,
+            x, wp, block_m=block_m, block_n=d,
             history_size=spec.taf.history_size,
             prediction_size=spec.taf.prediction_size,
             rsd_threshold=spec.taf.rsd_threshold)
@@ -216,17 +248,17 @@ def _host_eval(spec: ApproxSpec, seq, d, d_h, heads, seed):
     if t == Technique.IACT:
         a = _attn_exact(x @ wp, heads)
         qoi, mask = ref.iact_rowfn_ref(
-            a, w1, w2, block_rows=_BLOCK_ROWS,
+            a, w1, w2, block_rows=block_rows,
             table_size=spec.iact.table_size,
             threshold=spec.iact.threshold)
         return qoi, np.asarray(mask)
     if t == Technique.PERFORATION:
         p = x @ wp
         q = _split_heads(p, heads)
-        o = ref.attention_ref(q, q, q, causal=True, block_kv=_BLOCK_ATTN,
+        o = ref.attention_ref(q, q, q, causal=True, block_kv=block_attn,
                               perfo=spec.perforation)
         qoi = _ffn_exact(_merge_heads(o), w1, w2)
-        nkv = seq // _BLOCK_ATTN
+        nkv = seq // block_attn
         mask = ~perfo_mod.execute_mask(nkv, spec.perforation)
         return qoi, mask
     raise ValueError(f"no host evaluator for {t}")  # NONE handled by run()
@@ -237,12 +269,42 @@ def _host_eval(spec: ApproxSpec, seq, d, d_h, heads, seed):
 # ---------------------------------------------------------------------------
 
 def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
-             d_h: int = 64, heads: int = 2, seed: int = 0) -> ApproxApp:
+             d_h: int = 64, heads: int = 2, seed: int = 0,
+             blocks=None) -> ApproxApp:
     """`substrate=None` resolves the ambient default ONCE, at construction
     (it is part of the workload fingerprint: pallas and host rows must not
-    share DB cache keys)."""
+    share DB cache keys).
+
+    `blocks`: None (module default geometry, back-compatible fingerprint),
+    an explicit (block_m, block_rows, block_attn) tuple, or "tuned" (the
+    tuning-cache winners for this geometry via `tuned_blocks`). Non-default
+    blocks change the approx masks' granularity, so they join the workload
+    fingerprint -- rows swept at different geometries never share DB keys.
+    """
     sub = substrate_mod.resolve(substrate)
-    assert seq % _BLOCK_ATTN == 0 and d % heads == 0
+    if blocks == "tuned":
+        blocks = tuned_blocks(seq, d, d_h, heads)
+    if blocks is not None:
+        blocks = tuple(int(b) for b in blocks)
+        if blocks == _blocks3(None):
+            blocks = None  # identical geometry: keep the default fingerprint
+    block_m, block_rows, block_attn = _blocks3(blocks)
+    if seq % block_m or seq % block_rows or seq % block_attn:
+        raise ValueError(
+            f"approx_ffn blocks (block_m={block_m}, block_rows={block_rows},"
+            f" block_attn={block_attn}) must divide seq={seq}")
+    assert seq % block_attn == 0 and d % heads == 0
+
+    def _knob_runner(key):
+        if blocks is None:  # positional-default call: shares the lru entry
+            return _pallas_knob_runner(key, seq, d, d_h, heads, seed)
+        return _pallas_knob_runner(key, seq, d, d_h, heads, seed, blocks)
+
+    def _structural_runner(perfo):
+        if blocks is None:
+            return _pallas_structural_runner(perfo, seq, d, d_h, heads, seed)
+        return _pallas_structural_runner(perfo, seq, d, d_h, heads, seed,
+                                         blocks)
 
     def _result(spec, qoi, frac, mask, wall):
         return AppResult(
@@ -268,9 +330,9 @@ def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
             # eager oracle loops: no compile to warm, but the exact stages
             # they share (_attn_exact/_ffn_exact) are jnp -- run once so
             # dispatch setup is off the clock too
-            _host_eval(spec, seq, d, d_h, heads, seed)
+            _host_eval(spec, seq, d, d_h, heads, seed, blocks)
             t0 = time.perf_counter()
-            qoi, mask = _host_eval(spec, seq, d, d_h, heads, seed)
+            qoi, mask = _host_eval(spec, seq, d, d_h, heads, seed, blocks)
             qoi = jax.block_until_ready(qoi)
             wall = time.perf_counter() - t0
             frac = float(mask.mean()) if mask.size else 0.0
@@ -278,7 +340,7 @@ def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
         # pallas substrate: pick the structurally-right compiled runner
         key = batching.static_key(spec)
         if key is not None:
-            fn = _pallas_knob_runner(key, seq, d, d_h, heads, seed)
+            fn = _knob_runner(key)
             knob = jnp.float32(batching.traced_param(spec))
             out = fn(knob)  # compile (per structural group) + warmup
             jax.block_until_ready(out)
@@ -286,8 +348,7 @@ def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
             qoi, frac, mask = fn(knob)
             jax.block_until_ready(qoi)
         else:  # skip-driven perforation: structural kept set
-            fn = _pallas_structural_runner(spec.perforation, seq, d, d_h,
-                                           heads, seed)
+            fn = _structural_runner(spec.perforation)
             jax.block_until_ready(fn())
             t0 = time.perf_counter()
             qoi, frac, mask = fn()
@@ -298,7 +359,7 @@ def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
     run_batch = None
     if sub == substrate_mod.PALLAS:
         def make_group_fn(key):
-            knob_fn = _pallas_knob_runner(key, seq, d, d_h, heads, seed)
+            knob_fn = _knob_runner(key)
             vmapped = jax.jit(jax.vmap(knob_fn))
 
             def group(knobs):
@@ -313,8 +374,11 @@ def make_app(substrate: Optional[str] = None, seq: int = 128, d: int = 32,
         run_batch = batching.make_run_batch(run, make_group_fn,
                                             result_builder=result_builder)
 
+    workload = dict(substrate=sub, seq=seq, d=d, d_h=d_h, heads=heads,
+                    seed=seed)
+    if blocks is not None:
+        # tuned/explicit geometry changes mask granularity: new fingerprint
+        workload["blocks"] = list(blocks)
     return ApproxApp(
         name="approx_ffn", run=run, error_metric="mape",
-        run_batch=run_batch,
-        workload=dict(substrate=sub, seq=seq, d=d, d_h=d_h, heads=heads,
-                      seed=seed))
+        run_batch=run_batch, workload=workload)

@@ -67,19 +67,88 @@ SUBSTRATE_MACHINES: Dict[str, str] = {
     "host": "host-sim",
 }
 
+# the calibrated profile's reserved name: get_machine("measured") measures
+# the running backend on first use (see measure_machine)
+MEASURED_MACHINE = "measured"
+
+
+def measure_machine(name: str = MEASURED_MACHINE, *, size: int = 384,
+                    copy_mb: int = 8, repeats: int = 3,
+                    register: bool = True) -> MachineProfile:
+    """Calibrate a roofline profile on the backend actually running.
+
+    Three micro-measurements (median-of-k, warmed, blocked on results):
+
+      peak_flops -- a jitted (size, size) f32 matmul: 2*size^3 FLOPs;
+      hbm_bw     -- a jitted copy-scaled array op over ~copy_mb MiB
+                    (read + write = 2x the buffer);
+      dispatch_s -- a jitted scalar op: pure launch/dispatch floor.
+
+    ``ici_bw`` is inherited from the static profile of the running
+    substrate (interconnect bandwidth needs a multi-device collective to
+    measure; single-host calibration cannot observe it). The result is
+    registered in ``MACHINES`` under `name` so `AppCostModel(machine=
+    "measured")`, ladder prescreens, and the kernel autotuner's pre-prune
+    all sharpen to measured numbers instead of catalog constants.
+    Committed tuning caches still key on the *static* profile names --
+    "measured" is session-local by construction.
+    """
+    import time
+
+    import numpy as np
+    import jax
+    import jax.numpy as jnp
+
+    def _med(fn, *args):
+        jax.block_until_ready(fn(*args))  # compile + warm
+        ts = []
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    rng = np.random.RandomState(0)
+    a = jnp.asarray(rng.randn(size, size).astype(np.float32))
+    t_mm = _med(jax.jit(lambda x: x @ x), a)
+    peak_flops = max(2.0 * size ** 3 / max(t_mm, 1e-9), 1e9)
+
+    buf = jnp.asarray(rng.randn(copy_mb * (1 << 20) // 4)
+                      .astype(np.float32))
+    t_cp = _med(jax.jit(lambda x: x * 1.0000001 + 1.0), buf)
+    hbm_bw = max(2.0 * buf.nbytes / max(t_cp, 1e-9), 1e8)
+
+    dispatch_s = max(_med(jax.jit(lambda x: x + 1.0), jnp.float32(0.0)),
+                     1e-7)
+
+    base_name = ("tpu-v5e" if jax.default_backend() == "tpu"
+                 else "host-sim")
+    profile = MachineProfile(name=name, peak_flops=peak_flops,
+                             hbm_bw=hbm_bw,
+                             ici_bw=MACHINES[base_name].ici_bw,
+                             dispatch_s=dispatch_s)
+    if register:
+        MACHINES[name] = profile
+    return profile
+
 
 def get_machine(machine: Union[str, MachineProfile, None] = None
                 ) -> MachineProfile:
     """Resolve a profile by name (or pass one through). ``None`` gives the
     default profile; substrate names ("host" / "pallas") are accepted and
-    mapped through ``SUBSTRATE_MACHINES``."""
+    mapped through ``SUBSTRATE_MACHINES``; ``"measured"`` calibrates the
+    running backend on first use (`measure_machine`) and is cached in
+    ``MACHINES`` for the rest of the process."""
     if machine is None:
         machine = DEFAULT_MACHINE
     if isinstance(machine, MachineProfile):
         return machine
     name = SUBSTRATE_MACHINES.get(machine, machine)
+    if name == MEASURED_MACHINE and name not in MACHINES:
+        return measure_machine()
     if name not in MACHINES:
         raise KeyError(
             f"unknown machine profile {machine!r} "
-            f"(choose from: {', '.join(sorted(MACHINES))})")
+            f"(choose from: {', '.join(sorted(MACHINES))} "
+            f"or '{MEASURED_MACHINE}')")
     return MACHINES[name]

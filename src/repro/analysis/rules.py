@@ -230,10 +230,61 @@ def _check_benchmarks_wiring() -> List[Finding]:
     return findings
 
 
+def _check_tuning_cache() -> List[Finding]:
+    """Audit the committed block-shape tuning cache (`kernels/tuning.py`).
+
+    A cache entry is a shipped claim -- "this block shape is the measured
+    winner for this workload on this machine" -- and claims rot: a kernel's
+    search space changes, a machine profile is renamed, or someone
+    hand-edits a JSON entry whose block no longer divides the recorded
+    operand geometry. `kernels.ops` would silently run such an entry into
+    a runtime ValueError (or, worse, a stale-machine entry would never be
+    consulted again while still looking authoritative in review)."""
+    from repro.analysis.machine import MACHINES, MEASURED_MACHINE, \
+        SUBSTRATE_MACHINES
+    from repro.kernels import tuning
+
+    path = tuning.default_cache_path()
+    if path is None or not os.path.exists(path):
+        return []  # nothing committed/configured: nothing to audit
+    sub = f"tuning_cache:{path}"
+    try:
+        cache = tuning.TuningCache.load(path)
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A002", Severity.ERROR, sub,
+                        "tuning cache unreadable",
+                        {"error": f"{type(e).__name__}: {e}"[:300]})]
+    # machines the substrate table (plus any statically registered
+    # profile) can ever produce as a cache key; "measured" is session-
+    # local by design and must never be a committed key
+    known = (set(SUBSTRATE_MACHINES.values())
+             | (set(MACHINES) - {MEASURED_MACHINE}))
+    findings = []
+    for key, entry in sorted(cache.entries.items()):
+        esub = f"{sub}#{key}"
+        err = tuning.validate_entry(key, entry)
+        if err:
+            findings.append(Finding(
+                "A002", Severity.ERROR, esub,
+                "tuning-cache entry is invalid (stale or hand-edited): "
+                + err, {"entry": entry}))
+            continue
+        machine = entry.get("machine", "")
+        if machine not in known:
+            findings.append(Finding(
+                "A002", Severity.ERROR, esub,
+                f"tuning-cache entry keyed on machine {machine!r}, which "
+                "no substrate maps to (stale vs SUBSTRATE_MACHINES): the "
+                "entry can never be consulted",
+                {"machine": machine, "known": sorted(known)}))
+    return findings
+
+
 def rule_a002(apps: Sequence[str]) -> List[Finding]:
     findings: List[Finding] = []
     if "kernels" in apps:
         findings += _check_kernel_configs()
+        findings += _check_tuning_cache()
     if "ffn" in apps:
         findings += _check_ffn_geometry()
         findings += _check_benchmarks_wiring()

@@ -102,11 +102,15 @@ def use(substrate: Optional[str]):
 # Imports of repro.kernels happen inside the functions: this module is
 # imported by core/harness.py at package-init time and must stay light.
 
-def taf_matmul_region(x, w, spec: ApproxSpec, *, block_m: int, block_n: int,
+def taf_matmul_region(x, w, spec: ApproxSpec, *,
+                      block_m: Optional[int] = None,
+                      block_n: Optional[int] = None,
                       rsd_threshold=None, interpret: Optional[bool] = None):
     """TAF-memoized projection y = x @ w under `spec.taf`.
 
     `rsd_threshold` is the traced hook overriding the spec's static value.
+    Block args left None resolve through the tuning cache / fallbacks in
+    `kernels.ops` (mask granularity follows the resolved blocks).
     Returns (y, approx_mask (num_i, num_j) bool).
     """
     from repro.kernels import ops
@@ -120,7 +124,8 @@ def taf_matmul_region(x, w, spec: ApproxSpec, *, block_m: int, block_n: int,
                           rsd_threshold=th, interpret=interpret)
 
 
-def iact_ffn_region(x, w1, w2, spec: ApproxSpec, *, block_rows: int,
+def iact_ffn_region(x, w1, w2, spec: ApproxSpec, *,
+                    block_rows: Optional[int] = None,
                     threshold=None, interpret: Optional[bool] = None):
     """iACT-memoized FFN tile y = gelu(x @ w1) @ w2 under `spec.iact`.
 
@@ -139,18 +144,27 @@ def iact_ffn_region(x, w1, w2, spec: ApproxSpec, *, block_rows: int,
                           interpret=interpret)
 
 
-def attention_region(q, k, v, spec: Optional[ApproxSpec], *, block_q: int,
-                     block_kv: int, fraction=None, causal: bool = True,
+def attention_region(q, k, v, spec: Optional[ApproxSpec], *,
+                     block_q: Optional[int] = None,
+                     block_kv: Optional[int] = None,
+                     fraction=None, causal: bool = True,
                      interpret: Optional[bool] = None):
     """(Perforated) flash attention under `spec.perforation` (None = exact).
 
     `fraction` is the traced hook (ini/fini/random kinds only: it flips the
-    kernel into masked mode). Returns (o, kept_block_mask (nkv,) bool) where
-    the mask marks KV blocks that were EXECUTED (False = dropped).
+    kernel into masked mode). Block args left None resolve through the
+    tuning cache / fallbacks in `kernels.ops`; the kept-mask granularity
+    follows the resolved block_kv. Returns (o, kept_block_mask (nkv,) bool)
+    where the mask marks KV blocks that were EXECUTED (False = dropped).
     """
     import jax.numpy as jnp
     from repro.kernels import ops
     from . import perforation as perfo_mod
+    # resolve once here: the host-side kept-mask below must agree with the
+    # block_kv the kernel actually runs
+    blocks = ops._resolve_blocks("perforated_attention", (q, k), q.dtype,
+                                 block_q=block_q, block_kv=block_kv)
+    block_q, block_kv = blocks["block_q"], blocks["block_kv"]
     nkv = k.shape[2] // block_kv
     if spec is None or spec.technique == Technique.NONE:
         o = ops.flash_attention(q, k, v, block_q=block_q, block_kv=block_kv,

@@ -19,6 +19,13 @@ The distance threshold is a **traced** scalar-prefetch operand: only the
 structural parameters (block_rows, table_size, layer widths) shape the
 compiled program, so a threshold sweep compiles once per structural group
 and stacked thresholds ``jax.vmap`` straight through (docs/kernels.md).
+
+Unlike the other hot kernels this one has NO ``pipeline=`` variant: its
+grid is a single sequential axis and the memo table (keys/vals/meta
+scratch) carries across *every* block -- there is no state-free axis to
+mark "parallel", so DMA/compute overlap cannot be exposed through
+``dimension_semantics`` here (docs/kernels.md "Block-shape autotuning &
+DMA pipelining").
 """
 from __future__ import annotations
 
@@ -105,8 +112,17 @@ def iact_rowfn(x: jnp.ndarray, w1: jnp.ndarray, w2: jnp.ndarray, *,
     n, d_in = x.shape
     d_h = w1.shape[1]
     d_out = w2.shape[1]
-    assert w1.shape[0] == d_in and w2.shape[0] == d_h
-    assert n % block_rows == 0
+    if w1.shape[0] != d_in or w2.shape[0] != d_h:
+        raise ValueError(
+            f"iact_rowfn layer width mismatch: x is (N={n}, d_in={d_in}) so "
+            f"w1 must be (d_in, d_h) and w2 (d_h, d_out); got "
+            f"w1.shape={tuple(w1.shape)}, w2.shape={tuple(w2.shape)}")
+    if n % block_rows:
+        raise ValueError(
+            f"iact_rowfn block_rows={block_rows} does not divide the row "
+            f"count N={n}: the sequential grid needs whole row blocks. "
+            "kernels.tuning.search_space() enumerates only divisor-valid "
+            "shapes for these operands.")
     num_b = n // block_rows
 
     thresh = jnp.asarray(threshold, jnp.float32).reshape((1,))

@@ -4,6 +4,21 @@ On this CPU container the kernels run in interpret mode (`interpret=True`
 executes the kernel body in Python for validation); on TPU they compile to
 Mosaic. `ON_TPU` flips automatically; `ref.py` provides the oracles used by
 tests and by the pure-jnp model paths.
+
+Block arguments default to **None**, which resolves through the tuning
+cache (`kernels/tuning.py`): an exact (kernel, operand shapes, dtype,
+machine, substrate) hit supplies the autotuned block shape, anything else
+falls back to the historical hardcoded defaults (`tuning.FALLBACK_BLOCKS`,
+128 everywhere). Callers that rely on block geometry for SEMANTICS (approx
+masks are block-granular) keep passing explicit blocks -- a tuned geometry
+is a different workload fingerprint, not a transparent speedup.
+
+`pipeline` defaults to None -> True: the double-buffered kernel variants
+(parallel `dimension_semantics` on the state-free grid axes, so Mosaic
+overlaps the next tile's operand DMA with the current tile's compute) are
+bit-identical to `pipeline=False` and are the default data path.
+`iact_rowfn` has no pipelined variant: its grid is a single sequential
+axis whose memo-table scratch carries across every block.
 """
 from __future__ import annotations
 
@@ -27,31 +42,59 @@ def _interp(override: Optional[bool]) -> bool:
     return (not ON_TPU) if override is None else override
 
 
-def taf_matmul(x, w, *, block_m=128, block_n=128, history_size=3,
+def _pipe(override: Optional[bool]) -> bool:
+    return True if override is None else override
+
+
+def _resolve_blocks(kernel: str, arrays, dtype, **blocks):
+    """Fill None block args from the tuning cache (exact-shape hit) or the
+    hardcoded fallbacks. Explicit ints pass through untouched."""
+    if all(v is not None for v in blocks.values()):
+        return blocks
+    from . import tuning
+    shapes = tuning.operand_shapes(arrays)
+    tuned = tuning.tuned_config(kernel, shapes, dtype=str(dtype)) or {}
+    fallback = tuning.FALLBACK_BLOCKS[kernel]
+    return {k: (v if v is not None else int(tuned.get(k, fallback[k])))
+            for k, v in blocks.items()}
+
+
+def taf_matmul(x, w, *, block_m: Optional[int] = None,
+               block_n: Optional[int] = None, history_size=3,
                prediction_size=8, rsd_threshold=0.5, out_dtype=jnp.float32,
-               interpret: Optional[bool] = None):
+               interpret: Optional[bool] = None,
+               pipeline: Optional[bool] = None):
     """`rsd_threshold` is a traced operand: sweeping it reuses one compile
     per (block shape, history_size, prediction_size) structural group."""
-    return _taf_matmul(x, w, block_m=block_m, block_n=block_n,
+    b = _resolve_blocks("taf_matmul", (x, w), x.dtype,
+                        block_m=block_m, block_n=block_n)
+    return _taf_matmul(x, w, block_m=b["block_m"], block_n=b["block_n"],
                        history_size=history_size,
                        prediction_size=prediction_size,
                        rsd_threshold=rsd_threshold, out_dtype=out_dtype,
-                       interpret=_interp(interpret))
+                       interpret=_interp(interpret),
+                       pipeline=_pipe(pipeline))
 
 
-def iact_rowfn(x, w1, w2, *, block_rows=128, table_size=4, threshold=0.5,
-               out_dtype=jnp.float32, interpret: Optional[bool] = None):
+def iact_rowfn(x, w1, w2, *, block_rows: Optional[int] = None, table_size=4,
+               threshold=0.5, out_dtype=jnp.float32,
+               interpret: Optional[bool] = None):
     """`threshold` is a traced operand: sweeping it reuses one compile per
     (block_rows, table_size, widths) structural group."""
-    return _iact_rowfn(x, w1, w2, block_rows=block_rows,
+    b = _resolve_blocks("iact_rowfn", (x, w1, w2), x.dtype,
+                        block_rows=block_rows)
+    return _iact_rowfn(x, w1, w2, block_rows=b["block_rows"],
                        table_size=table_size, threshold=threshold,
                        out_dtype=out_dtype, interpret=_interp(interpret))
 
 
-def perforated_matmul(x, w, *, block_m=128, block_n=128, block_k=128,
+def perforated_matmul(x, w, *, block_m: Optional[int] = None,
+                      block_n: Optional[int] = None,
+                      block_k: Optional[int] = None,
                       perfo: Optional[PerforationParams] = None,
                       fraction=None, rescale=False, out_dtype=jnp.float32,
-                      interpret: Optional[bool] = None):
+                      interpret: Optional[bool] = None,
+                      pipeline: Optional[bool] = None):
     """`fraction` is the traced hook for ini/fini/random perforation: when
     set, the kernel's masked mode gates K blocks from an in-trace liveness
     vector and one compiled program serves any fraction."""
@@ -61,17 +104,22 @@ def perforated_matmul(x, w, *, block_m=128, block_n=128, block_k=128,
         # the natural sweep pattern -- a fresh PerforationParams per grid
         # point -- still hits one compile.
         perfo = dataclasses.replace(perfo, fraction=0.0)
-    return _perf_matmul(x, w, block_m=block_m, block_n=block_n,
-                        block_k=block_k, perfo=perfo, fraction=fraction,
+    b = _resolve_blocks("perforated_matmul", (x, w), x.dtype,
+                        block_m=block_m, block_n=block_n, block_k=block_k)
+    return _perf_matmul(x, w, block_m=b["block_m"], block_n=b["block_n"],
+                        block_k=b["block_k"], perfo=perfo, fraction=fraction,
                         rescale=rescale, out_dtype=out_dtype,
-                        interpret=_interp(interpret))
+                        interpret=_interp(interpret),
+                        pipeline=_pipe(pipeline))
 
 
-def perforated_attention(q, k, v, *, block_q=128, block_kv=128,
+def perforated_attention(q, k, v, *, block_q: Optional[int] = None,
+                         block_kv: Optional[int] = None,
                          perfo: Optional[PerforationParams] = None,
                          fraction=None, causal=True,
                          scale: Optional[float] = None,
-                         interpret: Optional[bool] = None):
+                         interpret: Optional[bool] = None,
+                         pipeline: Optional[bool] = None):
     """`fraction` is the traced hook for ini/fini/random perforation: when
     set, the kernel's masked mode gates KV blocks from an in-trace liveness
     vector and one compiled program serves any fraction."""
@@ -81,15 +129,24 @@ def perforated_attention(q, k, v, *, block_q=128, block_kv=128,
         # the natural sweep pattern -- a fresh PerforationParams per grid
         # point -- still hits one compile.
         perfo = dataclasses.replace(perfo, fraction=0.0)
-    return _perf_attention(q, k, v, block_q=block_q, block_kv=block_kv,
+    b = _resolve_blocks("perforated_attention", (q, k), q.dtype,
+                        block_q=block_q, block_kv=block_kv)
+    return _perf_attention(q, k, v, block_q=b["block_q"],
+                           block_kv=b["block_kv"],
                            perfo=perfo, fraction=fraction, causal=causal,
-                           scale=scale, interpret=_interp(interpret))
+                           scale=scale, interpret=_interp(interpret),
+                           pipeline=_pipe(pipeline))
 
 
-def flash_attention(q, k, v, *, block_q=128, block_kv=128, causal=True,
+def flash_attention(q, k, v, *, block_q: Optional[int] = None,
+                    block_kv: Optional[int] = None, causal=True,
                     scale: Optional[float] = None,
-                    interpret: Optional[bool] = None):
+                    interpret: Optional[bool] = None,
+                    pipeline: Optional[bool] = None):
     """Standard causal flash attention == perforated_attention with no drops."""
-    return _perf_attention(q, k, v, block_q=block_q, block_kv=block_kv,
-                           perfo=None, causal=causal, scale=scale,
-                           interpret=_interp(interpret))
+    b = _resolve_blocks("perforated_attention", (q, k), q.dtype,
+                        block_q=block_q, block_kv=block_kv)
+    return _perf_attention(q, k, v, block_q=b["block_q"],
+                           block_kv=b["block_kv"], perfo=None, causal=causal,
+                           scale=scale, interpret=_interp(interpret),
+                           pipeline=_pipe(pipeline))

@@ -105,14 +105,16 @@ def _attn_kernel(kept_ref, live_ref, q_ref, k_ref, v_ref, o_ref,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "block_q", "block_kv", "perfo", "causal", "scale", "interpret"))
+    "block_q", "block_kv", "perfo", "causal", "scale", "interpret",
+    "pipeline"))
 def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
                          block_q: int = 128, block_kv: int = 128,
                          perfo: Optional[PerforationParams] = None,
                          fraction=None,
                          causal: bool = True,
                          scale: Optional[float] = None,
-                         interpret: bool = False) -> jnp.ndarray:
+                         interpret: bool = False,
+                         pipeline: bool = False) -> jnp.ndarray:
     """q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) with Hq % Hkv == 0.
 
     Returns (B, Hq, Sq, D) in q.dtype. Queries sit at the END of the KV
@@ -124,11 +126,27 @@ def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     (ini/fini/random). When set, the kernel runs in MASKED mode -- the grid
     enumerates every KV block and a liveness vector computed in-trace gates
     the dropped ones -- so the same compiled program serves any fraction.
+
+    `pipeline=True` marks the batch/head/query-tile axes "parallel" (the
+    online-softmax scratch m/l/acc only carries along the kk axis),
+    letting Mosaic multi-buffer the next KV tile's DMA against the current
+    tile's compute. Bit-identical outputs either way.
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, dk = k.shape
-    assert dk == d and v.shape == k.shape and hq % hkv == 0
-    assert sq % block_q == 0 and skv % block_kv == 0
+    if dk != d or v.shape != k.shape or hq % hkv:
+        raise ValueError(
+            f"perforated_attention operand mismatch: q is "
+            f"(B, Hq, Sq, D)={tuple(q.shape)} so k and v must share "
+            f"(B, Hkv, Skv, D) with D={d} and Hq % Hkv == 0; got "
+            f"k.shape={tuple(k.shape)}, v.shape={tuple(v.shape)}")
+    if sq % block_q or skv % block_kv:
+        raise ValueError(
+            f"perforated_attention block shape (block_q={block_q}, "
+            f"block_kv={block_kv}) does not divide the sequence geometry "
+            f"(Sq={sq}, Skv={skv}): block_q must divide Sq and block_kv "
+            "must divide Skv. kernels.tuning.search_space() enumerates "
+            "only divisor-valid shapes for these operands.")
     group = hq // hkv
     nkv = skv // block_kv
     if fraction is not None:
@@ -177,9 +195,17 @@ def perforated_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((block_q, d), jnp.float32),
         ],
     )
+    extra = {}
+    if pipeline:
+        # b, h, iq tile independent outputs; only kk carries the
+        # online-softmax scratch. Interpret mode ignores compiler_params.
+        extra["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
         interpret=interpret,
+        **extra,
     )(kept_arr, live_arr, q, k, v)

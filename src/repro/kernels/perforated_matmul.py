@@ -62,13 +62,14 @@ def _perf_matmul_kernel(kept_ref, live_ref, factor_ref, x_ref, w_ref, o_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "block_m", "block_n", "block_k", "perfo", "rescale", "out_dtype",
-    "interpret"))
+    "interpret", "pipeline"))
 def perforated_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
                       block_n: int = 128, block_k: int = 128,
                       perfo: Optional[PerforationParams] = None,
                       fraction=None,
                       rescale: bool = False, out_dtype=jnp.float32,
-                      interpret: bool = False) -> jnp.ndarray:
+                      interpret: bool = False,
+                      pipeline: bool = False) -> jnp.ndarray:
     """Y ~= X @ W computing only the kept K-blocks (herded perforation).
 
     `fraction` is the traced-parameter hook: a (possibly traced) scalar
@@ -76,10 +77,26 @@ def perforated_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
     (ini/fini/random). When set, the kernel runs in MASKED mode -- the grid
     enumerates every K block and a liveness vector computed in-trace gates
     the dropped ones -- so the same compiled program serves any fraction.
+
+    `pipeline=True` marks the two output-tile axes (i, j) "parallel" (the
+    accumulator scratch only carries along the kk axis), letting Mosaic
+    multi-buffer the next tile's operand DMA against the current tile's
+    compute. Bit-identical outputs either way.
     """
     m, k = x.shape
     k2, n = w.shape
-    assert k == k2 and m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    if k != k2:
+        raise ValueError(
+            f"perforated_matmul contraction mismatch: x has K={k} columns "
+            f"but w has K={k2} rows (x.shape={tuple(x.shape)}, "
+            f"w.shape={tuple(w.shape)})")
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"perforated_matmul block shape (block_m={block_m}, "
+            f"block_n={block_n}, block_k={block_k}) does not divide the "
+            f"operand geometry (M={m}, N={n}, K={k}): each block must "
+            "divide its axis. kernels.tuning.search_space() enumerates "
+            "only divisor-valid shapes for these operands.")
     nk = k // block_k
     if fraction is not None:
         if perfo is None or perfo.kind not in FRACTION_KINDS:
@@ -119,9 +136,16 @@ def perforated_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
                                (i, j)),
         scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
     )
+    extra = {}
+    if pipeline:
+        # i and j tile independent outputs; only kk carries the accumulator
+        # scratch. Interpret mode ignores compiler_params entirely.
+        extra["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"))
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         interpret=interpret,
+        **extra,
     )(kept_arr, live_arr, factor_arr, x, w)

@@ -82,21 +82,36 @@ def _taf_matmul_kernel(thresh_ref, x_ref, w_ref, o_ref, mask_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "block_m", "block_n", "history_size", "prediction_size",
-    "out_dtype", "interpret"))
+    "out_dtype", "interpret", "pipeline"))
 def taf_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
                block_n: int = 128, history_size: int = 3,
                prediction_size: int = 8, rsd_threshold=0.5,
-               out_dtype=jnp.float32,
-               interpret: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
+               out_dtype=jnp.float32, interpret: bool = False,
+               pipeline: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Returns (y (M, N), approx_mask (num_i, num_j) int32).
 
     `rsd_threshold` may be a Python float or a traced scalar: it rides in
     scalar memory and never shapes the compiled program.
+
+    `pipeline=True` marks the column-block axis j "parallel" (it carries no
+    scratch state: window/counters/memo reset at i == 0 per column block),
+    letting Mosaic multi-buffer the next tile's operand DMA against the
+    current tile's compute. The temporal axis i stays "arbitrary" -- its
+    scratch carry IS the TAF mechanism. Bit-identical outputs either way.
     """
     m, k = x.shape
     k2, n = w.shape
-    assert k == k2, (x.shape, w.shape)
-    assert m % block_m == 0 and n % block_n == 0
+    if k != k2:
+        raise ValueError(
+            f"taf_matmul contraction mismatch: x has K={k} columns but w "
+            f"has K={k2} rows (x.shape={tuple(x.shape)}, "
+            f"w.shape={tuple(w.shape)})")
+    if m % block_m or n % block_n:
+        raise ValueError(
+            f"taf_matmul block shape ({block_m}, {block_n}) does not divide "
+            f"the output geometry ({m}, {n}): block_m must divide M={m} and "
+            f"block_n must divide N={n}. kernels.tuning.search_space() "
+            "enumerates only divisor-valid shapes for these operands.")
     num_i, num_j = m // block_m, n // block_n
 
     thresh = jnp.asarray(rsd_threshold, jnp.float32).reshape((1,))
@@ -121,6 +136,13 @@ def taf_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
             pltpu.VMEM((block_m, block_n), jnp.float32),
         ],
     )
+    extra = {}
+    if pipeline:
+        # j carries no state across grid steps (scratch resets at i == 0 per
+        # column block); i is the paper's temporal sequence and must stay
+        # sequential. Interpret mode ignores compiler_params entirely.
+        extra["compiler_params"] = pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
     y, mask = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -129,5 +151,6 @@ def taf_matmul(x: jnp.ndarray, w: jnp.ndarray, *, block_m: int = 128,
             jax.ShapeDtypeStruct((num_i, num_j), jnp.int32),
         ],
         interpret=interpret,
+        **extra,
     )(thresh, x, w)
     return y, mask.astype(bool)

@@ -115,6 +115,12 @@ def decode_cost_model(cfg=None, *, batch: int = 2, gen: int = 16,
     signed, so the first-order accumulation is a random walk, not the
     worst-case linear stack (which would reject every rung the measured
     ladders accept).
+
+    `machine` accepts any `analysis.machine` name, including
+    ``"measured"``: `get_machine` then calibrates a roofline profile on
+    the backend actually running (matmul FLOP/s, copy bandwidth, dispatch
+    floor) so prescreens and QoS ladder checks stop resting on catalog
+    constants when real hardware numbers are a micro-benchmark away.
     """
     import math
 
@@ -147,7 +153,9 @@ def prescreen_thresholds(cfg, thresholds: Sequence[float], *,
     `min_speedup`, or predicted error bound over `max_error`), so
     `harness.sweep(make_decode_app(cfg), ...)` measures only plausible
     candidates. The kept/dropped count is logged by the shared
-    `analysis.cost.filter_specs` path."""
+    `analysis.cost.filter_specs` path. Pass ``machine="measured"`` to
+    prescreen against a profile calibrated on the running backend instead
+    of the static catalog."""
     from repro.analysis.cost import filter_specs
 
     model = decode_cost_model(cfg, batch=batch, gen=gen, machine=machine)
