@@ -152,8 +152,9 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
     if artifacts_dir:
         os.makedirs(artifacts_dir, exist_ok=True)
         path = os.path.join(artifacts_dir, "BENCH_ffn.json")
+        from repro.obs import metrics as obs_metrics
         with open(path, "w") as f:
-            json.dump({
+            json.dump(obs_metrics.stamp({
                 "substrate": app.workload["substrate"],
                 "n_records": len(recs),
                 "front": fs,
@@ -165,5 +166,5 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
                         "spec": b.spec})
                     for tech, b in best_rows.items()},
                 "parity": parity,
-            }, f, indent=1)
+            }), f, indent=1)
         report("ffn_json", "0", path)

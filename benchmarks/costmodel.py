@@ -285,8 +285,9 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
     if artifacts_dir:
         os.makedirs(artifacts_dir, exist_ok=True)
         path = os.path.join(artifacts_dir, "BENCH_costmodel.json")
+        from repro.obs import metrics as obs_metrics
         with open(path, "w") as f:
-            json.dump(doc, f, indent=1)
+            json.dump(obs_metrics.stamp(doc), f, indent=1)
         report("costmodel_json", "0", path)
 
 

@@ -243,8 +243,9 @@ def main(report, artifacts_dir: Optional[str] = None):
             json.dump(rows, f, indent=1)
         report("kernel_micro_json", "0", path)
         bpath = os.path.join(artifacts_dir, "BENCH_kernel.json")
+        from repro.obs import metrics as obs_metrics
         with open(bpath, "w") as f:
-            json.dump(bench, f, indent=1)
+            json.dump(obs_metrics.stamp(bench), f, indent=1)
         report("BENCH_kernel_json", "0", bpath)
         cpath = cache.save(os.path.join(artifacts_dir, "tuning_cache.json"))
         report("tuning_cache_json", "0", cpath)

@@ -48,6 +48,7 @@ def main(report, artifacts_dir: Optional[str] = None):
     if artifacts_dir:
         os.makedirs(artifacts_dir, exist_ok=True)
         out = os.path.join(artifacts_dir, "BENCH_lint.json")
+        from repro.obs import metrics as obs_metrics
         with open(out, "w") as f:
-            json.dump(doc, f, indent=1, sort_keys=True)
+            json.dump(obs_metrics.stamp(doc), f, indent=1, sort_keys=True)
         report("lint_artifact", f"{us:.0f}", out)

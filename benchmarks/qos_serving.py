@@ -39,6 +39,9 @@ from repro import qos
 from repro.core.harness import sweep
 from repro.core.types import ApproxSpec
 from repro.models import build
+from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
+from repro.obs import trace as obs_trace
 from repro.serving import Request, ServingEngine
 
 _THRESHOLDS = (0.02, 0.04, 0.06, 0.1, 0.3)
@@ -163,9 +166,15 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
     q_eng = ServingEngine(model, params, slots=slots, max_len=64,
                           prompt_len=8, qos=engine_qos, **engine_kw)
     q_eng.warmup()
-    q_stats, q_wall = _serve_trace(
-        q_eng, _trace(cfg, **trace_kw), spike_at=_SPIKE_TICK,
-        spike_shard=(n_shards - 1 if n_shards > 1 else None))
+    # flight recorder over the QoS run: the injected spike trips a hard
+    # fallback, so the artifact also proves the last-N-ticks dump fires
+    flight = obs_recorder.install(capacity=32, out_dir=artifacts_dir)
+    try:
+        q_stats, q_wall = _serve_trace(
+            q_eng, _trace(cfg, **trace_kw), spike_at=_SPIKE_TICK,
+            spike_shard=(n_shards - 1 if n_shards > 1 else None))
+    finally:
+        obs_recorder.uninstall()
     report("qos_mesh", "0",
            f"devices={devices or 1},mesh_shape={q_eng.mesh_shape},"
            f"shards={n_shards},slots={slots},requests={n_requests}")
@@ -196,7 +205,7 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
                f"rung={c['index']}")
     report("qos_fallback", "0",
            f"rate={summary['fallback_rate']:.3f},knob_moves="
-           f"{q_stats.knob_moves}")
+           f"{q_stats.knob_moves},flight_dumps={len(flight.dumps)}")
     lat = q_stats.latency_summary()
     report("qos_latency", "0",
            f"ttft_p50={lat['ttft_p50_s']:.3f}s,ttft_p99="
@@ -206,12 +215,15 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
     if artifacts_dir:
         os.makedirs(artifacts_dir, exist_ok=True)
         path = os.path.join(artifacts_dir, "BENCH_qos.json")
-        # engine-level knob actuations; sharded entries hold one value per
-        # shard, and the per-shard trajectories below slice them out
+        # engine-level knob actuations (with the typed move's reason);
+        # sharded entries hold one value per shard, and the per-shard
+        # trajectories below slice them out
         actuations = [
-            {"tick": t, "threshold": (list(v) if isinstance(v, tuple)
-                                      else v)}
-            for t, v in q_eng.knob_log]
+            {"tick": m.tick,
+             "threshold": (list(m.value) if isinstance(m.value, tuple)
+                           else m.value),
+             "reason": m.reason}
+            for m in q_eng.knob_events]
         per_shard_traj = None
         if n_shards > 1:
             per_shard_traj = {
@@ -221,7 +233,7 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
                          for t, v in q_eng.knob_log]
                 for s in range(n_shards)}
         with open(path, "w") as f:
-            json.dump({
+            json.dump(obs_metrics.stamp({
                 "target_max_error": _TARGET,
                 "metric": policy.metric,
                 "canary_fraction": _CANARY_FRACTION,
@@ -253,5 +265,41 @@ def main(report, jobs: int = 1, db_path: Optional[str] = None,
                 "knob_trajectory": traj,
                 "knob_trajectory_per_shard": per_shard_traj,
                 "shard_exposure": summary.get("shard_exposure"),
-            }, f, indent=1)
+                "flight_dumps": [
+                    {"reason": d["reason"], "context": d["context"],
+                     "ticks": len(d["ticks"])}
+                    for d in flight.dumps],
+            }), f, indent=1)
         report("qos_json", "0", path)
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        description="QoS serving drill (the `qos` module of benchmarks.run, "
+        "runnable standalone for tracing)")
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--db", default=None)
+    ap.add_argument("--artifacts", default=None)
+    ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=None)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome/Perfetto trace of the run "
+                    "(serving tick sub-spans, QoS decision events, sweep "
+                    "and compile spans) and write it to this path")
+    args = ap.parse_args()
+
+    tracer = None
+    if args.trace:
+        tracer = obs_trace.Tracer()
+        obs_trace.enable(tracer)
+    try:
+        main(lambda n, us, d="": print(f"{n},{us},{d}", flush=True),
+             jobs=args.jobs, db_path=args.db, artifacts_dir=args.artifacts,
+             devices=args.devices, shards=args.shards)
+    finally:
+        if tracer is not None:
+            obs_trace.disable()
+            tracer.save(args.trace)
+            print(f"trace,{len(tracer)},{args.trace}", flush=True)

@@ -53,8 +53,8 @@ sys.path.insert(0, "examples")
 from . import (approx_ffn_sweep, costmodel, fig3_table_memory,
                fig6_best_speedup, fig7_cg_sweep, fig8c_items_per_thread,
                fig10c_rsd_behavior, fig11c_hierarchy,
-               fig12c_kmeans_convergence, kernel_micro, lint, pareto_refine,
-               qos_serving, roofline_table)
+               fig12c_kmeans_convergence, kernel_micro, lint, obs_overhead,
+               pareto_refine, qos_serving, roofline_table)
 
 MODULES = {
     "fig3": fig3_table_memory,
@@ -71,6 +71,7 @@ MODULES = {
     "qos": qos_serving,
     "roofline": roofline_table,
     "costmodel": costmodel,
+    "obs": obs_overhead,
 }
 
 
@@ -159,6 +160,18 @@ _BASELINE_CHECKS = {
                   "apps.lavamd.spearman", "apps.minife_cg.spearman",
                   "ffn.spearman", "ffn.front_recovery.ratio"),
         "atleast": (),
+    },
+    # the obs layer's overhead contract: the 0.95-tracing-overhead floor
+    # is gated as a precomputed boolean (`ratio_ok`) under `exact` --
+    # `close` (rtol=0.25) and `atleast` (noise=0.8) are both far looser
+    # than the contract -- and the disabled/enabled paths must add ZERO
+    # compiles to the serve step (an instrumentation hook that changes a
+    # jit signature is exactly the regression this file exists to catch).
+    "BENCH_obs.json": {
+        "exact": ("metric", "ratio_ok", "extra_compiles_disabled",
+                  "extra_compiles_enabled"),
+        "close": (),
+        "atleast": ("disabled_ticks_per_s", "enabled_ticks_per_s"),
     },
 }
 
@@ -268,6 +281,10 @@ def main() -> None:
                     help="cost-model pruned mode for predict-aware modules "
                     "(ffn: measure only the predicted front band, <= 1/5 of "
                     "the grid, and report recovery vs the committed front)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a Chrome/Perfetto trace of the whole run "
+                    "(one span per module, plus every repro.obs span the "
+                    "modules emit) and write it to this path")
     args = ap.parse_args()
     if args.check_regression and not args.artifacts:
         ap.error("--check-regression needs --artifacts (the gate compares "
@@ -300,6 +317,14 @@ def main() -> None:
     def report(name: str, us, derived: str = ""):
         print(f"{name},{us},{derived}", flush=True)
 
+    tracer = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+        tracer = obs_trace.Tracer()
+        obs_trace.enable(tracer)
+
+    from repro.obs import metrics as obs_metrics
+
     for key in keys:
         mod = MODULES[key.strip()]
         accepted = inspect.signature(mod.main).parameters
@@ -309,12 +334,26 @@ def main() -> None:
                                 ("devices", args.devices),
                                 ("predict", True if args.predict else None))
               if k in accepted and v is not None}
+        # each module starts from a clean metrics registry, so the obs
+        # snapshot stamped into its BENCH_*.json is that module's alone
+        obs_metrics.reset()
         t0 = time.time()
         try:
-            mod.main(report, **kw)
+            if tracer is not None:
+                from repro.obs import trace as obs_trace
+                with obs_trace.span(f"bench.{key.strip()}"):
+                    mod.main(report, **kw)
+            else:
+                mod.main(report, **kw)
         except Exception as e:  # keep the harness running
             report(key, "ERROR", str(e)[:200])
         report(f"_{key}_total_s", f"{time.time() - t0:.1f}")
+
+    if tracer is not None:
+        from repro.obs import trace as obs_trace
+        obs_trace.disable()
+        tracer.save(args.trace)
+        report("trace", len(tracer), args.trace)
 
     if args.check_regression:
         # after the module loop, OUTSIDE the per-module exception guard:

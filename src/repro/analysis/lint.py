@@ -42,6 +42,7 @@ def run_lint(*, apps: Sequence[str] = APP_NAMES,
         "A005": lambda: rules_mod.rule_a005(apps),
         "A006": lambda: rules_mod.rule_a006(policies),
         "A007": lambda: rules_mod.rule_a007(apps),
+        "A008": lambda: rules_mod.rule_a008(apps),
     }
     for rid in rules_mod.RULE_IDS:
         if rid not in rules:
@@ -70,7 +71,7 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis.lint",
         description="approxlint: static analysis for approximation "
-        "regions, kernels, and QoS ladders (rules A001-A007)")
+        "regions, kernels, and QoS ladders (rules A001-A008)")
     ap.add_argument("--apps", default="all",
                     help="comma-separated target groups "
                     f"({','.join(APP_NAMES)}) or 'all'")

@@ -93,20 +93,15 @@ def measure_machine(name: str = MEASURED_MACHINE, *, size: int = 384,
     Committed tuning caches still key on the *static* profile names --
     "measured" is session-local by construction.
     """
-    import time
-
     import numpy as np
     import jax
     import jax.numpy as jnp
 
+    from repro.obs.timing import measure
+
     def _med(fn, *args):
-        jax.block_until_ready(fn(*args))  # compile + warm
-        ts = []
-        for _ in range(max(1, repeats)):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn(*args))
-            ts.append(time.perf_counter() - t0)
-        return float(np.median(ts))
+        return measure(fn, *args, warmup=1, repeats=max(1, repeats),
+                       stat="median", span="machine.calibrate").seconds
 
     rng = np.random.RandomState(0)
     a = jnp.asarray(rng.randn(size, size).astype(np.float32))

@@ -626,4 +626,85 @@ def rule_a007(apps: Sequence[str]) -> List[Finding]:
     return findings
 
 
-RULE_IDS = ("A001", "A002", "A003", "A004", "A005", "A006", "A007")
+# --------------------------------------------------------------------------
+# A008 -- instrumentation safety (obs hooks in jitted hot paths)
+# --------------------------------------------------------------------------
+
+def check_instrumentation_safety(fn, example_args, subject: str
+                                 ) -> List[Finding]:
+    """Audit `fn`'s obs instrumentation by tracing it under an ACTIVE
+    tracer (scoped; the caller's tracer is restored).
+
+    Two failure modes, both of which silently destroy the serving plane's
+    zero-sync contract (docs/observability.md):
+
+      * the trace aborts with a ConcretizationTypeError -- an obs hook
+        (or anything it calls) forces a traced value to a concrete host
+        value (`float()`, `np.asarray`, bool coercion) INSIDE the jitted
+        region: under jit that is a device->host transfer per call, and
+        under `jax.jit` tracing it is an outright error;
+      * the trace succeeds but an event/span payload captured a
+        `jax.core.Tracer` -- legal at trace time, but the payload escapes
+        to the Python-side record buffer, so serializing or even printing
+        the trace later concretizes abstract values (crash) and, had the
+        hook read it eagerly, would have synced the device every call.
+
+    Because `repro.obs.trace` stores payloads AS GIVEN (never coerced),
+    the probe sees exactly what leaked.
+    """
+    from repro.obs import trace as obs_trace
+
+    tracer = obs_trace.Tracer()
+    try:
+        with obs_trace.use(tracer):
+            jax.make_jaxpr(fn)(*example_args)
+    except jax.errors.ConcretizationTypeError as e:
+        return [Finding(
+            "A008", Severity.ERROR, subject,
+            "instrumentation concretizes a traced value inside the jitted "
+            "region: a device->host transfer on every call",
+            {"error": f"{type(e).__name__}: {e}"[:500]})]
+    except Exception as e:  # noqa: BLE001
+        return [Finding("A008", Severity.WARNING, subject,
+                        "instrumentation-safety target failed to trace",
+                        {"error": f"{type(e).__name__}: {e}"[:500]})]
+    findings: List[Finding] = []
+    for rec in tracer.records:
+        for k, v in (rec.get("args") or {}).items():
+            for leaf in jax.tree_util.tree_leaves(v):
+                if isinstance(leaf, jax.core.Tracer):
+                    findings.append(Finding(
+                        "A008", Severity.ERROR,
+                        f"{subject}.{rec['name']}",
+                        f"obs payload {k!r} captures a traced value: the "
+                        "abstract tracer escapes to the host-side event "
+                        "buffer (device sync per call once read, crash on "
+                        "export)",
+                        {"event": rec["name"], "key": k,
+                         "aval": str(getattr(leaf, "aval", ""))[:200]}))
+    return findings
+
+
+def rule_a008(apps: Sequence[str]) -> List[Finding]:
+    findings: List[Finding] = []
+    tt: List[targets_mod.TraceTarget] = []
+    if "kernels" in apps:
+        tt += targets_mod.kernel_trace_targets()
+    if "decode" in apps:
+        tt.append(targets_mod.serve_taint_target())
+    for t in tt:
+        try:
+            fn, example_args = t.build()
+        except Exception as e:  # noqa: BLE001
+            findings.append(Finding(
+                "A008", Severity.WARNING, t.subject,
+                "instrumentation-safety target failed to build",
+                {"error": f"{type(e).__name__}: {e}"[:500]}))
+            continue
+        findings += check_instrumentation_safety(fn, example_args,
+                                                 t.subject)
+    return findings
+
+
+RULE_IDS = ("A001", "A002", "A003", "A004", "A005", "A006", "A007",
+            "A008")

@@ -20,6 +20,8 @@ from __future__ import annotations
 import random
 from typing import Callable, List, Optional, Sequence
 
+from repro.obs import trace
+
 from . import substrate as substrate_mod
 from .harness import AppResult, ApproxApp, Record, _make_record, run_specs
 from .types import ApproxSpec
@@ -71,9 +73,13 @@ def successive_halving(app: ApproxApp, specs: Sequence[ApproxSpec], *,
     rng.shuffle(pool)
     repeats = base_repeats
     rung_records: List[Record] = []
+    rung = 0
     while pool:
-        rung_records = _evaluate_all(app, pool, exact, repeats, jobs,
-                                     substrate)
+        with trace.span("autotune.rung", app=app.name, rung=rung,
+                        pool=len(pool), repeats=repeats):
+            rung_records = _evaluate_all(app, pool, exact, repeats, jobs,
+                                         substrate)
+        rung += 1
         ranked = sorted(zip(rung_records, pool),
                         key=lambda rs: -_score(rs[0], max_error))
         keep = max(1, len(pool) // eta)
@@ -115,5 +121,7 @@ def random_search(app: ApproxApp, sampler: Callable[[random.Random],
                                    context=f"autotune:{app.name}")
             specs.extend(kept)
         specs = specs[:budget] or [sampler(rng) for _ in range(budget)]
-    records = _evaluate_all(app, specs, exact, repeats, jobs, substrate)
+    with trace.span("autotune.random_search", app=app.name,
+                    budget=len(specs), repeats=repeats):
+        records = _evaluate_all(app, specs, exact, repeats, jobs, substrate)
     return sorted(records, key=lambda r: -_score(r, max_error))

@@ -232,12 +232,14 @@ def run_batch_grouped(
             continue
         params = jnp.asarray([traced_param(specs[i]) for i in idxs],
                              jnp.float32)
-        out = fn(params)  # compile + warmup
-        jax.block_until_ready(out)
-        t0 = time.perf_counter()
-        out = fn(params)
-        jax.block_until_ready(out)
-        wall = (time.perf_counter() - t0) / len(idxs)
+        from repro.obs import trace
+        from repro.obs.timing import measure
+        with trace.span("batching.group_compile", key=str(key),
+                        specs=len(idxs)):
+            jax.block_until_ready(fn(params))  # compile + warmup
+        m = measure(fn, params, warmup=0, repeats=1,
+                    span="batching.group_run")
+        out, wall = m.value, m.seconds / len(idxs)
         qois, fracs = out[0], out[1]
         extras = out[2] if len(out) > 2 else {}
         qois = np.asarray(qois)

@@ -39,6 +39,9 @@ from typing import (Callable, Dict, Iterable, List, Optional, Sequence,
 
 import numpy as np
 
+from repro import obs
+from repro.obs import trace
+
 from . import substrate as substrate_mod
 from .types import (ApproxSpec, IACTParams, Level, PerforationKind,
                     PerforationParams, TAFParams, Technique)
@@ -315,14 +318,20 @@ def run_specs(app: ApproxApp, specs: Sequence[ApproxSpec], repeats: int = 1,
                 "approxlint found recompile leaks in the spec population: "
                 + "; ".join(f"{f.rule} {f.subject}: {f.message}"
                             for f in findings))
+    def _one(s: ApproxSpec) -> AppResult:
+        # per-spec span (thread-safe: the tracer locks appends and tags
+        # each record with its emitting thread)
+        with trace.span("harness.spec", app=app.name,
+                        technique=s.technique.name):
+            return _timed(lambda: app.run(s), repeats)
+
     with substrate_mod.use(substrate):
         if jobs > 1 and app.run_batch is not None:
             return _run_batched(app, specs, repeats, batch_size=jobs)
         if jobs > 1:
             with ThreadPoolExecutor(max_workers=jobs) as pool:
-                return list(pool.map(
-                    lambda s: _timed(lambda: app.run(s), repeats), specs))
-        return [_timed(lambda: app.run(s), repeats) for s in specs]
+                return list(pool.map(_one, specs))
+        return [_one(s) for s in specs]
 
 
 def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
@@ -395,12 +404,17 @@ def sweep(app: ApproxApp, specs: Iterable[ApproxSpec], repeats: int = 3,
             seen.add(h)
             todo.append((h, s))
 
+    obs.count(f"sweep.{app.name}.cache_hits", float(len(cached)))
+    obs.count(f"sweep.{app.name}.evaluated", float(len(todo)))
     fresh: Dict[str, Record] = {}
     if todo:
         with substrate_mod.use(substrate):
-            exact = _timed(lambda: app.exact(), repeats)
-        results = run_specs(app, [s for _, s in todo], repeats, jobs,
-                            substrate=substrate)
+            with trace.span("harness.exact", app=app.name):
+                exact = _timed(lambda: app.exact(), repeats)
+        with trace.span("harness.sweep", app=app.name, specs=len(todo),
+                        cached=len(cached), jobs=jobs):
+            results = run_specs(app, [s for _, s in todo], repeats, jobs,
+                                substrate=substrate)
         for (h, s), res in zip(todo, results):
             rec = _make_record(app, s, res, exact)
             fresh[h] = rec

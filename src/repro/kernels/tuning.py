@@ -262,16 +262,13 @@ def predict_time_s(kernel: str, arrays: Sequence, config: Dict[str, int],
 def measure_s(fn: Callable, *args, warmup: int = 2, repeats: int = 5
               ) -> float:
     """Median-of-k wall-clock seconds: explicit warm-up calls absorb
-    compile + first-dispatch, then each repeat blocks on the result."""
-    import jax
-    for _ in range(max(1, warmup)):
-        jax.block_until_ready(fn(*args))
-    ts = []
-    for _ in range(max(1, repeats)):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        ts.append(time.perf_counter() - t0)
-    return float(np.median(ts))
+    compile + first-dispatch, then each repeat blocks on the result.
+    Thin wrapper over the shared `obs.timing.measure` (same semantics;
+    this name is the tuner's historical entry point)."""
+    from repro.obs.timing import measure
+    return measure(fn, *args, warmup=max(1, warmup),
+                   repeats=max(1, repeats), stat="median",
+                   span="tuning.measure").seconds
 
 
 # --------------------------------------------------------------------------
@@ -440,11 +437,14 @@ def autotune(kernel: str, *arrays, cache: Optional[TuningCache] = None,
     sub = substrate or current_substrate()
     shapes = key_shapes(kernel, operand_shapes(arrays))
     dtype = str(arrays[0].dtype)
+    from repro import obs
     cache = cache if cache is not None else default_cache()
     key = cache_key(kernel, shapes, dtype, mp.name, sub)
     hit = cache.get(key)
     if hit is not None:
+        obs.count("tuning.cache_hits")
         return dict(hit["config"])
+    obs.count("tuning.cache_misses")
 
     space = search_space(kernel, shapes)
     if not space:
@@ -463,10 +463,13 @@ def autotune(kernel: str, *arrays, cache: Optional[TuningCache] = None,
         timer = measure_fn or (
             lambda fn, args: measure_s(fn, *args, warmup=warmup,
                                        repeats=repeats))
+        from repro.obs import trace
         timed = []
         for cfg in candidates:
-            s = float(timer(build_call(kernel, cfg, pipeline=pipeline),
-                            arrays))
+            with trace.span("tuning.measure_config", kernel=kernel,
+                            config=dict(cfg)):
+                s = float(timer(build_call(kernel, cfg, pipeline=pipeline),
+                                arrays))
             timed.append((s, cfg))
             if log:
                 log(f"{kernel} {cfg}: {s * 1e6:.1f}us")

@@ -1,0 +1,75 @@
+"""The repo's ONE warm-up/median-of-k wall-clock measurement helper.
+
+Four call sites used to hand-roll the same loop with slightly different
+bugs waiting to happen (`kernels/tuning.py`, `analysis/machine.py`,
+`core/batching.py`, `qos/calibrate.py`); they all route through
+`measure()` now. The semantics every caller needs:
+
+  * each warm-up AND timed call is forced with `jax.block_until_ready`,
+    so async dispatch never hides device time;
+  * the reported statistic defaults to the median of `repeats` timed
+    calls (robust to one-off scheduler noise); `stat="min"` gives the
+    best-of-N the sweep harness's `_timed` uses;
+  * when tracing is enabled, each measurement emits one span named by
+    `span` (or "obs.measure") carrying the per-repeat times.
+
+`warmup=0, repeats=1` degenerates to a plain timed call, which is what
+`qos/calibrate.py` needs around its already-warm decode loop.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+
+from repro.obs import trace
+
+
+@dataclass(frozen=True)
+class Measurement:
+    """Result of `measure()`: the chosen statistic, the raw per-repeat
+    times, and the value returned by the final timed call."""
+
+    seconds: float
+    times: Tuple[float, ...] = field(default=())
+    value: Any = None
+
+
+def _stat(times: List[float], stat: str) -> float:
+    if stat == "median":
+        s = sorted(times)
+        return s[len(s) // 2]
+    if stat == "min":
+        return min(times)
+    if stat == "mean":
+        return sum(times) / len(times)
+    raise ValueError(f"unknown stat {stat!r} (median|min|mean)")
+
+
+def measure(fn: Callable, *args, warmup: int = 2, repeats: int = 5,
+            stat: str = "median", span: Optional[str] = None,
+            **kwargs) -> Measurement:
+    """Time `fn(*args, **kwargs)` with warm-up and `block_until_ready`
+    forcing; return the `stat` over `repeats` timed calls.
+
+    `repeats=0` is allowed only as "warm but don't time" and reports
+    seconds=0.0 with no samples (used when a caller wants the warm-up
+    discipline without a measurement).
+    """
+    value = None
+    for _ in range(warmup):
+        value = jax.block_until_ready(fn(*args, **kwargs))
+    times: List[float] = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        value = jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    seconds = _stat(times, stat) if times else 0.0
+    if trace.enabled():
+        with trace.span(span or "obs.measure", warmup=warmup,
+                        repeats=repeats, stat=stat, seconds=seconds,
+                        times=list(times)):
+            pass
+    return Measurement(seconds=seconds, times=tuple(times), value=value)

@@ -31,7 +31,6 @@ front ranks when wall times are noisy.
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import List, Sequence
 
 import numpy as np
@@ -41,6 +40,7 @@ import jax.numpy as jnp
 from repro.core.harness import AppResult, ApproxApp
 from repro.core.types import ApproxSpec, Level, TAFParams, Technique
 from repro.launch import steps as steps_mod
+from repro.obs.timing import measure
 
 
 def default_decode_cfg(arch: str = "qwen3-1.7b", *, history_size: int = 2,
@@ -218,21 +218,32 @@ def make_decode_app(cfg=None, *, batch: int = 2, prompt_len: int = 8,
             warmed.append(True)
         cache = set_decode_threshold(cache, th)
         jax.block_until_ready(tokens)
-        skipped = total = 0
         outs = []
-        t0 = time.perf_counter()
-        for t in range(gen):
-            tokens, logits, cache = serve(params, cache, tokens,
-                                          jnp.int32(prompt_len + t))
-            outs.append(logits)
-            rem = np.asarray(cache["taf"]["remaining"])
-            skipped += int((rem > 0).sum())
-            total += rem.size
-        # stamp BEFORE QoI host assembly: the per-step np.asarray above
-        # already syncs each device step, and np.stack/argmax add a
-        # constant host term that would compress every speedup toward 1
-        # (fast rungs measured <= 1x get pruned from the policy ladder).
-        wall = time.perf_counter() - t0
+        state = {"tokens": tokens, "cache": cache, "skipped": 0, "total": 0}
+
+        def decode_loop():
+            toks, c = state["tokens"], state["cache"]
+            for t in range(gen):
+                toks, logits, c = serve(params, c, toks,
+                                        jnp.int32(prompt_len + t))
+                outs.append(logits)
+                rem = np.asarray(c["taf"]["remaining"])
+                state["skipped"] += int((rem > 0).sum())
+                state["total"] += rem.size
+            state["tokens"], state["cache"] = toks, c
+            # the per-step np.asarray above already synced every device
+            # step, so returning host ints keeps measure()'s trailing
+            # block_until_ready a no-op
+            return state["total"]
+
+        # timed via the shared helper, but NOT its warmup/median loop:
+        # the serve step is pre-warmed above and the wall must stamp
+        # BEFORE QoI host assembly -- np.stack/argmax add a constant host
+        # term that would compress every speedup toward 1 (fast rungs
+        # measured <= 1x get pruned from the policy ladder).
+        wall = measure(decode_loop, warmup=0, repeats=1,
+                       span="calibrate.decode").seconds
+        skipped, total = state["skipped"], state["total"]
         qoi = np.stack([np.asarray(o) for o in outs], axis=0)
         if metric == "mcr":
             qoi = np.argmax(qoi, axis=-1)

@@ -31,6 +31,7 @@ import dataclasses
 from typing import Dict, List, Optional, Union
 
 from repro.core.types import ApproxSpec
+from repro.obs import trace
 
 from .monitor import QualityMonitor
 from .policy import PolicyEntry, QosPolicy, QosTarget
@@ -212,6 +213,16 @@ class QosController:
         self.trajectory.append(TrajectoryPoint(
             step=self.steps, index=self.index, estimate=est, drift=drift,
             event=event))
+        # decision events with reasons, for the Perfetto timeline; steady
+        # "hold" steps stay out of the trace (they carry no decision) but
+        # every state change -- including warmup/cooldown transitions --
+        # lands with the evidence that drove it
+        if event != "hold" and trace.enabled():
+            trace.event("qos_decision",
+                        request_class=self.target.request_class,
+                        reason=event, index=self.index, estimate=est,
+                        drift=drift, window=window_size,
+                        bound=bound)
         return self.entry()
 
     # ------------------------------------------------------------------

@@ -27,6 +27,7 @@ import numpy as np
 
 from repro.core import batching
 from repro.core.types import ApproxSpec
+from repro.obs import recorder as obs_recorder
 
 from .controller import ControllerConfig, QosController
 from .monitor import QualityMonitor
@@ -260,6 +261,7 @@ class QosEngine:
             self.controllers[cls].update(est=mon.estimate(),
                                          drift=mon.drift(),
                                          window_size=mon.window_size)
+        self._flight_note(sorted(live), shard_rungs=self._actuated_shards)
 
     def inject(self, error: float, shard: Optional[int] = None) -> None:
         """Stage a deterministic fault. Without `shard`, equivalent to
@@ -361,6 +363,41 @@ class QosEngine:
         for cls in sorted(live):
             self.controllers[cls].update(est=est, drift=drift,
                                          window_size=wsize)
+        self._flight_note(sorted(live))
+
+    def _flight_note(self, stepped: Sequence[str],
+                     shard_rungs: Optional[Tuple[int, ...]] = None) -> None:
+        """Feed the flight recorder (when one is installed): one per-tick
+        note of per-class control state, and a `trip()` dump on the tick a
+        controller fires its hard fallback -- the incident the ring buffer
+        exists for. Host-side dict work only; no-op without a recorder."""
+        rec = obs_recorder.get_recorder()
+        if rec is None:
+            return
+        classes = {}
+        for cls, ctl in self.controllers.items():
+            mon = self.class_monitors.get(cls, self.monitor)
+            last = ctl.trajectory[-1] if ctl.trajectory else None
+            classes[cls] = {
+                "index": ctl.index,
+                "knob": spec_knob(ctl.spec()),
+                "bound": ctl.target.max_error,
+                "estimate": mon.estimate(),
+                "drift": mon.drift(),
+                "window": mon.window_size,
+                "event": last.event if last else None,
+            }
+        note = {"classes": classes}
+        if shard_rungs is not None:
+            note["shard_rungs"] = list(shard_rungs)
+        rec.note(**note)
+        for cls in stepped:
+            t = self.controllers[cls].trajectory
+            if t and t[-1].event == "fallback":
+                rec.trip("fallback", request_class=cls,
+                         estimate=t[-1].estimate, drift=t[-1].drift,
+                         bound=self.controllers[cls].target.max_error,
+                         step=t[-1].step)
 
     # ------------------------------------------------------------------
     # reporting

@@ -31,6 +31,7 @@ from typing import Deque
 import numpy as np
 
 from repro.core.harness import ERROR_METRICS
+from repro.obs import trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -108,6 +109,10 @@ class QualityMonitor:
         err = float(self.metric_fn(np.asarray(exact_qoi),
                                    np.asarray(approx_qoi)))
         self._record(err)
+        if trace.enabled():
+            trace.event("canary", metric=self.metric, error=err,
+                        estimate=self.estimate(),
+                        window=len(self._window))
         return err
 
     def record(self, error: float) -> None:
@@ -127,6 +132,8 @@ class QualityMonitor:
         self.injected += 1
         self._injected_sum += float(error)
         self._record(float(error))
+        trace.event("fault_injected", metric=self.metric,
+                    error=float(error))
 
     def _record(self, error: float) -> None:
         self._window.append(error)

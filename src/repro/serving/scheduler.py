@@ -36,6 +36,10 @@ import jax.numpy as jnp
 from repro.core.types import ApproxSpec, Technique
 from repro.launch import steps as steps_mod
 from repro.models.lm import Model
+from repro.obs import metrics as obs_metrics
+from repro.obs import recorder as obs_recorder
+from repro.obs import trace
+from repro.obs.metrics import percentile as _percentile
 
 
 @dataclasses.dataclass
@@ -52,10 +56,20 @@ class Request:
     finished_at: Optional[float] = None
 
 
-def _percentile(values: List[float], q: float) -> Optional[float]:
-    if not values:
-        return None
-    return float(np.percentile(np.asarray(values, np.float64), q))
+@dataclasses.dataclass(frozen=True)
+class KnobMove:
+    """One actuator write: the typed record behind `knob_log`.
+
+    `value`/`previous` are the threshold actually written -- a float, or
+    a per-shard tuple on sharded engines (`previous` is None for the
+    first actuation). `reason` classifies the move from the controller
+    state and the value delta: init | tighten | loosen | fallback |
+    mixed. Emitted as an obs `knob_move` event when tracing."""
+    tick: int
+    value: object
+    previous: object
+    reason: str
+    shard: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -186,10 +200,10 @@ class ServingEngine:
         self.tokens = self._place_tokens(jnp.zeros((slots,), jnp.int32))
         self.qos = qos
         self._knob = None                    # last actuated threshold(s)
-        # (tick, threshold) per actuation -- the engine-level knob
-        # trajectory (controller trajectories live on the QosEngine).
-        # Sharded engines log a per-shard tuple per entry.
-        self.knob_log: List[tuple] = []
+        # typed engine-level knob trajectory (controller trajectories
+        # live on the QosEngine); the legacy `knob_log` view derives
+        # from it. Sharded engines log a per-shard tuple per move.
+        self.knob_events: List[KnobMove] = []
         self._serve_exact = None
         if qos is not None:
             if (model.cfg.approx_decode.technique != Technique.TAF
@@ -240,6 +254,33 @@ class ServingEngine:
                     "approxlint found serving misconfigurations: "
                     + "; ".join(f"{f.rule} {f.subject}: {f.message}"
                                 for f in findings))
+
+    @property
+    def knob_log(self) -> List[tuple]:
+        """Backward-compatible `(tick, value)` view of `knob_events` --
+        exactly the tuples the pre-obs list held, so `BENCH_qos.json`
+        trajectories and the sharded-parity tests compare unchanged."""
+        return [(m.tick, m.value) for m in self.knob_events]
+
+    def _knob_reason(self, val, prev) -> str:
+        """Classify an actuator write from controller state + the value
+        delta. The plan's knob realizes decisions the controllers took at
+        the END of the previous tick, so `in_fallback` is current here."""
+        if prev is None:
+            return "init"
+        if self.qos is not None and any(
+                c.in_fallback for c in self.qos.controllers.values()):
+            return "fallback"
+        old = prev if isinstance(prev, tuple) else (prev,)
+        new = val if isinstance(val, tuple) else (val,)
+        if len(old) != len(new):            # resharding edge: no delta
+            return "init"
+        up = any(n > o for o, n in zip(old, new))
+        down = any(n < o for o, n in zip(old, new))
+        if up and down:
+            return "mixed"
+        # lower TAF threshold => fewer skips => more precise
+        return "tighten" if down else "loosen"
 
     @property
     def sharded(self) -> bool:
@@ -355,6 +396,11 @@ class ServingEngine:
         the PR 5 review caught single-device compile time polluting
         throughput, and the sharded step compiles are bigger still.
         Engine state is untouched."""
+        with trace.span("engine.warmup", slots=self.n_slots,
+                        shards=self.n_shards):
+            self._warmup_body()
+
+    def _warmup_body(self):
         prompts = jnp.zeros((self.n_slots, self.prompt_len), jnp.int32)
         logits, cache = self._prefill(self.params, {"tokens": prompts})
         cache = self._shard_cache(cache)
@@ -465,87 +511,129 @@ class ServingEngine:
         # per-tick re-shard of the whole cache
         self.cache = self._place_cache(set_decode_threshold(self.cache,
                                                             val))
+        prev = self._knob
         self._knob = val
         # Admission re-prefills rebuild the cache and force a re-apply of
         # the SAME value (self._knob reset to None); that is maintenance,
         # not a controller decision -- only genuine value changes are
         # knob moves in the stats and the trajectory artifact.
-        if not self.knob_log or self.knob_log[-1][1] != val:
+        if not self.knob_events or self.knob_events[-1].value != val:
             self.stats.knob_moves += 1
-            self.knob_log.append((self.stats.ticks, val))
+            last = (self.knob_events[-1].value if self.knob_events
+                    else prev)
+            move = KnobMove(tick=self.stats.ticks, value=val,
+                            previous=last,
+                            reason=self._knob_reason(val, last))
+            self.knob_events.append(move)
+            trace.event("knob_move", tick=move.tick, value=move.value,
+                        previous=move.previous, reason=move.reason)
 
     def tick(self) -> int:
         """One engine step: admit, decode one token for all active slots,
-        retire finished requests. Returns number of live slots."""
-        self._admit()
-        live = [i for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return 0
-        lane_classes = []
-        shard_classes = None
-        if self.qos is not None:
-            lane_classes = [self.active[i].qos_class for i in live]
-            if self.sharded:
-                shard_classes = [[] for _ in range(self.n_shards)]
+        retire finished requests. Returns number of live slots.
+
+        Instrumentation contract (docs/observability.md): the obs hooks
+        below are host-side timers and event appends only -- they must
+        never add a `block_until_ready`, read a traced value, or perturb
+        the serve signature. Zero extra compiles with obs on OR off is
+        pinned by `tests/test_obs.py` via `_serve._cache_size()`, and the
+        disabled-path cost by the BENCH_obs throughput-ratio gate."""
+        tr_on = trace.enabled()
+        rec = obs_recorder.get_recorder()
+        t_tick = time.perf_counter() if (tr_on or rec is not None) else 0.0
+        with trace.span("engine.tick", tick=self.stats.ticks):
+            with trace.span("tick.admit"):
+                self._admit()
+            live = [i for i, r in enumerate(self.active) if r is not None]
+            if not live:
+                return 0
+            lane_classes = []
+            shard_classes = None
+            if self.qos is not None:
+                lane_classes = [self.active[i].qos_class for i in live]
+                with trace.span("tick.actuate"):
+                    if self.sharded:
+                        shard_classes = [[] for _ in range(self.n_shards)]
+                        for i in live:
+                            shard_classes[self._lane_shard(i)].append(
+                                self.active[i].qos_class)
+                        plan = self.qos.plan_shards(shard_classes)
+                        self._apply_knob(plan.shard_knobs)
+                    else:
+                        plan = self.qos.plan_tick(lane_classes)
+                        self._apply_knob(plan.knob)
+            pos = int(self.pos[live].min())  # single shared timeline pos
+            pre_tokens, pre_cache = self.tokens, self.cache
+            with trace.span("tick.serve", live=len(live)):
+                self.tokens, logits, self.cache = self._serve(
+                    self.params, self.cache, self.tokens, jnp.int32(pos))
+            if self.qos is not None and self.qos.should_sample():
+                # canary: the precise oracle from the SAME pre-tick state.
+                # Score ONLY the live lanes -- idle/retired slots hold
+                # zero-padded or stale state nobody consumes, and their
+                # garbage logits would pollute the quality estimate.
+                with trace.span("tick.canary"):
+                    _, exact_logits, _ = self._serve_exact(
+                        self.params, pre_cache, pre_tokens, jnp.int32(pos))
+                    ex = np.asarray(exact_logits)
+                    ap = np.asarray(logits)
+                    if self.sharded:
+                        # per-shard attribution: each shard's slice is
+                        # scored separately, so a canary error is credited
+                        # only to the shard (and the classes) that ran
+                        # under that knob
+                        for s in range(self.n_shards):
+                            lanes = [i for i in live
+                                     if self._lane_shard(i) == s]
+                            if lanes:
+                                self.qos.observe_shard(
+                                    s, ex[lanes], ap[lanes],
+                                    shard_classes[s])
+                    else:
+                        self.qos.observe_decode(ex[live], ap[live],
+                                                lane_classes)
+                self.stats.canary_ticks += 1
+            with trace.span("tick.host_read"):
+                toks = np.asarray(self.tokens)
+                if self.cache is not None and "taf" in self.cache:
+                    rem = np.asarray(self.cache["taf"]["remaining"])
+                    self.stats.taf_skipped += int((rem > 0).sum())
+                    self.stats.taf_total += rem.size
+            now = time.time()
+            with trace.span("tick.retire"):
                 for i in live:
-                    shard_classes[self._lane_shard(i)].append(
-                        self.active[i].qos_class)
-                plan = self.qos.plan_shards(shard_classes)
-                self._apply_knob(plan.shard_knobs)
-            else:
-                plan = self.qos.plan_tick(lane_classes)
-                self._apply_knob(plan.knob)
-        pos = int(self.pos[live].min())  # single shared timeline position
-        pre_tokens, pre_cache = self.tokens, self.cache
-        self.tokens, logits, self.cache = self._serve(
-            self.params, self.cache, self.tokens, jnp.int32(pos))
-        if self.qos is not None and self.qos.should_sample():
-            # canary: the precise oracle from the SAME pre-tick state.
-            # Score ONLY the live lanes -- idle/retired slots hold
-            # zero-padded or stale state nobody consumes, and their
-            # garbage logits would pollute the quality estimate.
-            _, exact_logits, _ = self._serve_exact(
-                self.params, pre_cache, pre_tokens, jnp.int32(pos))
-            ex, ap = np.asarray(exact_logits), np.asarray(logits)
-            if self.sharded:
-                # per-shard attribution: each shard's slice is scored
-                # separately, so a canary error is credited only to the
-                # shard (and the classes) that ran under that knob
-                for s in range(self.n_shards):
-                    lanes = [i for i in live if self._lane_shard(i) == s]
-                    if lanes:
-                        self.qos.observe_shard(s, ex[lanes], ap[lanes],
-                                               shard_classes[s])
-            else:
-                self.qos.observe_decode(ex[live], ap[live], lane_classes)
-            self.stats.canary_ticks += 1
-        toks = np.asarray(self.tokens)
-        if self.cache is not None and "taf" in self.cache:
-            rem = np.asarray(self.cache["taf"]["remaining"])
-            self.stats.taf_skipped += int((rem > 0).sum())
-            self.stats.taf_total += rem.size
-        now = time.time()
-        for i in live:
-            req = self.active[i]
-            if req.first_token_at is None:
-                req.first_token_at = now
-                self.stats.ttft_s.append(now - req.submitted_at)
-            req.output.append(int(toks[i]))
-            self.pos[i] += 1
-            self.stats.tokens_out += 1
-            done = (self.pos[i] >= self.limit[i] or
-                    (req.eos_id is not None and toks[i] == req.eos_id))
-            if done:
-                req.finished_at = now
-                self.stats.latency_s.append(now - req.submitted_at)
-                self.active[i] = None
-                self.stats.finished += 1
-        self.stats.ticks += 1
-        if self.qos is not None:
-            if self.sharded:
-                self.qos.update_shards(shard_classes)
-            else:
-                self.qos.update(lane_classes)
+                    req = self.active[i]
+                    if req.first_token_at is None:
+                        req.first_token_at = now
+                        self.stats.ttft_s.append(now - req.submitted_at)
+                    req.output.append(int(toks[i]))
+                    self.pos[i] += 1
+                    self.stats.tokens_out += 1
+                    done = (self.pos[i] >= self.limit[i] or
+                            (req.eos_id is not None
+                             and toks[i] == req.eos_id))
+                    if done:
+                        req.finished_at = now
+                        self.stats.latency_s.append(now - req.submitted_at)
+                        self.active[i] = None
+                        self.stats.finished += 1
+            self.stats.ticks += 1
+            if self.qos is not None:
+                with trace.span("tick.qos_update"):
+                    if self.sharded:
+                        self.qos.update_shards(shard_classes)
+                    else:
+                        self.qos.update(lane_classes)
+        if tr_on or rec is not None:
+            dt = time.perf_counter() - t_tick
+            if tr_on:
+                reg = obs_metrics.registry()
+                reg.histogram("serving.tick_s").observe(dt)
+                reg.gauge("serving.live_lanes").set(len(live))
+                reg.counter("serving.tokens_out").inc(len(live))
+            if rec is not None:
+                # close out the note the QoS update opened for this tick
+                rec.amend(tick_s=dt, live=len(live), knob=self._knob)
         return len([r for r in self.active if r is not None])
 
     def run_until_drained(self, max_ticks: int = 10_000) -> EngineStats:
